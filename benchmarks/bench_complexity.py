@@ -1,0 +1,72 @@
+"""Fig. 2 / Table 7 analogue: loss-node cost vs projector width d.
+
+Measures, for n = 256 and d in a sweep:
+  * compiled FLOPs + HBM bytes (trip-exact, single device) of the
+    regularizer value-and-grad for:
+      - R_off naive          (materialize C: the paper's baseline)
+      - R_off Gram           (beyond-paper O(n^2 d) baseline strengthening)
+      - R_sum FFT            (paper, q=2 Parseval path)
+      - R_sum^(128) grouped  (paper, b=128)
+  * wall-clock on this CPU for the sizes that are feasible.
+
+The paper's claim: R_sum is O(nd log d) vs O(nd^2) — ratios grow with d.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import compiled_costs, fmt_row, sds, time_fn
+from repro.core import regularizers as regs
+from repro.kernels.xcorr_offdiag.ops import r_off_gram
+
+N = 256
+DS_COST = (1024, 2048, 4096, 8192, 16384)
+DS_WALL = (1024, 2048, 4096, 8192)
+
+
+def _variants(n):
+    return {
+        "r_off_naive": lambda a, b: regs.r_off(regs.cross_correlation_matrix(a, b, scale=n)),
+        "r_off_gram": lambda a, b: r_off_gram(a, b, scale=float(n)),
+        "r_sum_fft": lambda a, b: regs.r_sum(a, b, q=2, scale=float(n)),
+        "r_sum_b128": lambda a, b: regs.r_sum_grouped(a, b, 128, q=2, scale=float(n)),
+    }
+
+
+def run():
+    rows = []
+    for d in DS_COST:
+        base_flops = None
+        for name, fn in _variants(N).items():
+            vg = lambda a, b: jax.value_and_grad(fn, argnums=(0, 1))(a, b)
+            costs = compiled_costs(vg, sds((N, d)), sds((N, d)))
+            if name == "r_off_naive":
+                base_flops = costs["flops"]
+            ratio = base_flops / max(costs["flops"], 1)
+            rows.append(
+                fmt_row(
+                    f"complexity/{name}/d{d}",
+                    0.0,
+                    f"flops={costs['flops']:.3e};bytes={costs['hbm_bytes']:.3e};speedup_vs_naive={ratio:.1f}x",
+                )
+            )
+    for d in DS_WALL:
+        base_us = None
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        z1 = jax.random.normal(k1, (N, d))
+        z2 = jax.random.normal(k2, (N, d))
+        for name, fn in _variants(N).items():
+            vg = jax.jit(lambda a, b: jax.value_and_grad(fn, argnums=(0, 1))(a, b))
+            us = time_fn(vg, z1, z2, repeats=3)
+            if name == "r_off_naive":
+                base_us = us
+            rows.append(
+                fmt_row(f"complexity_wall/{name}/d{d}", us, f"speedup_vs_naive={base_us/us:.2f}x")
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,58 @@
+"""Table 4 / Tables 12-13 analogue: forward-loss and backward-loss node
+time, proposed vs baseline, across d — the loss node is where the paper's
+O(nd^2) -> O(nd log d) bites.
+
+Wall-clock on this CPU (single device) with n = 128, plus the Pallas-kernel
+variants in interpret mode for completeness (interpret mode measures the
+kernel *logic*, not TPU speed — compiled FLOP ratios are in
+bench_complexity)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_row, time_fn
+from repro.core import losses as L
+
+N = 128
+DS = (2048, 4096, 8192)
+
+
+def run():
+    rows = []
+    for d in DS:
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        z1 = jax.random.normal(k1, (N, d))
+        z2 = jax.random.normal(k2, (N, d))
+        key = jax.random.PRNGKey(1)
+        arms = {
+            "bt_off": L.DecorrConfig(style="bt", reg="off"),
+            "bt_sum": L.DecorrConfig(style="bt", reg="sum", q=2),
+            "bt_sum_b128": L.DecorrConfig(style="bt", reg="sum", q=2, block_size=128),
+            "vic_off": L.DecorrConfig(style="vic", reg="off"),
+            "vic_sum": L.DecorrConfig(style="vic", reg="sum", q=1),
+        }
+        base = {}
+        for name, cfg in arms.items():
+            fwd = jax.jit(lambda a, b: L.ssl_loss(a, b, cfg, key)[0])
+            bwd = jax.jit(jax.grad(lambda a, b: L.ssl_loss(a, b, cfg, key)[0], argnums=(0, 1)))
+            us_f = time_fn(fwd, z1, z2, repeats=3)
+            us_b = time_fn(bwd, z1, z2, repeats=3)
+            fam = name.split("_")[0]
+            if name.endswith("_off"):
+                base[fam] = (us_f, us_b)
+            sf = base[fam][0] / us_f
+            sb = base[fam][1] / us_b
+            rows.append(
+                fmt_row(
+                    f"train_time/{name}/d{d}",
+                    us_f + us_b,
+                    f"fwd_us={us_f:.0f};bwd_us={us_b:.0f};fwd_speedup={sf:.2f}x;bwd_speedup={sb:.2f}x",
+                )
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

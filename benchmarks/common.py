@@ -1,0 +1,45 @@
+"""Benchmark helpers: wall-clock timing + compiled-graph cost extraction."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_cost import analyze_hlo
+
+
+def time_fn(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Best-of-N wall time in microseconds (jitted fn; blocks on result)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def compiled_costs(fn: Callable, *shape_args) -> Dict[str, float]:
+    """Trip-exact flops/bytes of the compiled (single-device) graph."""
+    compiled = jax.jit(fn).lower(*shape_args).compile()
+    a = analyze_hlo(compiled.as_text())
+    mem = compiled.memory_analysis()
+    return {
+        "flops": a.flops,
+        "hbm_bytes": a.hbm_bytes,
+        "temp_bytes": float(mem.temp_size_in_bytes),
+    }
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def fmt_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,43 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run complexity # one suite
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+SUITES = {
+    "complexity": "benchmarks.bench_complexity",       # Fig. 2 / Table 7
+    "blocksize": "benchmarks.bench_blocksize",         # Fig. 3
+    "permutation": "benchmarks.bench_permutation",     # Tables 5 & 6
+    "q": "benchmarks.bench_q",                         # Table 11
+    "training_time": "benchmarks.bench_training_time", # Table 4 / 12 / 13
+    "equivalence": "benchmarks.bench_loss_equivalence",# kernel agreement
+    "distributed": "benchmarks.bench_distributed",     # DESIGN §4 modes
+    "roofline": "benchmarks.roofline",                 # §Roofline (from dryrun)
+}
+
+
+def main() -> None:
+    import importlib
+
+    wanted = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    for key in wanted:
+        mod = importlib.import_module(SUITES[key])
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # keep the harness going
+            rows = [f"{key}/ERROR,0,{type(e).__name__}: {e}"]
+        for row in rows:
+            print(row, flush=True)
+        print(f"# suite {key} took {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""The framework feature: the paper's decorrelation as an auxiliary loss on
+an assigned LM architecture's hidden states.
+
+Trains two reduced CodeQwen models — with and without the VICReg-style
+R_sum aux loss — and compares (a) LM cross-entropy and (b) the hidden-state
+feature-correlation metric (Eq. 16 applied to hidden states).
+
+    PYTHONPATH=src python examples/lm_decorrelation.py --steps 120
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.decorrelation import LMDecorrConfig
+from repro.core.losses import DecorrConfig, normalized_bt_regularizer
+from repro.data import LMDataConfig, lm_batch
+from repro.models import forward, init_params
+from repro.optim import adamw, warmup_cosine
+from repro.train import create_train_state, make_train_step
+
+
+def run(arch: str, enabled: bool, steps: int, seed: int = 0):
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(
+        cfg,
+        decorr=LMDecorrConfig(
+            enabled=enabled,
+            decorr=DecorrConfig(style="vic", reg="sum", q=2, block_size=None),
+            mu=1.0,
+            nu=2.0,
+            tokens_per_seq=16,
+        ),
+    )
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt = adamw(weight_decay=0.0)
+    state = create_train_state(params, opt, seed=seed)
+    step_fn = jax.jit(make_train_step(cfg, opt, warmup_cosine(3e-3, 10, steps)))
+    dcfg = LMDataConfig(vocab_size=cfg.vocab_size, batch=8, seq_len=32, seed=seed)
+    for i in range(steps):
+        state, m = step_fn(state, {k: jnp.asarray(v) for k, v in lm_batch(dcfg, i).items()})
+    out = forward(state.params, cfg, tokens=jnp.asarray(lm_batch(dcfg, 99_999)["tokens"]))
+    h = out.hidden.reshape(-1, cfg.d_model)
+    corr = float(normalized_bt_regularizer(h, h + 0.0))
+    return float(m["ce"]), corr
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="codeqwen1.5-7b")
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    ce_off, corr_off = run(args.arch, enabled=False, steps=args.steps)
+    ce_on, corr_on = run(args.arch, enabled=True, steps=args.steps)
+    print(f"arch={args.arch} (reduced), {args.steps} steps each, {time.time()-t0:.1f}s total")
+    print(f"  without decorr aux:  ce={ce_off:.4f}  hidden feature corr (Eq.16) = {corr_off:.4f}")
+    print(f"  with    decorr aux:  ce={ce_on:.4f}  hidden feature corr (Eq.16) = {corr_on:.4f}")
+    print(f"  -> correlation reduced {corr_off/max(corr_on,1e-9):.1f}x; "
+          f"CE within {abs(ce_on-ce_off)/ce_off*100:.1f}% of the plain run")
+
+
+if __name__ == "__main__":
+    main()

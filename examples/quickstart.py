@@ -1,0 +1,73 @@
+"""Quickstart: the paper's regularizer in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. computes R_sum via FFT and shows it matches the O(nd^2) matrix route,
+2. shows the FLOP asymptotics (O(nd log d) vs O(nd^2)) on compiled graphs,
+3. trains a small Barlow Twins-style model with the proposed loss and
+   watches the baseline's own decorrelation metric (Eq. 16) drop.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses as L
+from repro.core import regularizers as regs
+from repro.core import sumvec as sv
+from repro.data import SSLDataConfig, ssl_batch
+from repro.optim import adamw, warmup_cosine
+from repro.train import create_train_state
+from repro.train.ssl import SSLModelConfig, embed, init_ssl_params, make_ssl_train_step
+
+
+def main():
+    # --- 1. the identity (Eq. 12) ------------------------------------------
+    n, d = 64, 256
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    z1, z2 = jax.random.normal(k1, (n, d)), jax.random.normal(k2, (n, d))
+    c = regs.cross_correlation_matrix(z1, z2, scale=n)
+    via_fft = sv.sumvec_fft(z1, z2, scale=float(n))
+    via_mat = sv.sumvec_from_matrix(c)
+    print(f"[1] sumvec FFT vs matrix route: max|diff| = "
+          f"{float(jnp.max(jnp.abs(via_fft - via_mat))):.2e}  (O(nd log d) vs O(nd^2))")
+
+    # --- 2. compiled FLOPs --------------------------------------------------
+    from repro.launch.hlo_cost import analyze_hlo
+
+    def flops_of(fn):
+        comp = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((256, 4096), jnp.float32),
+            jax.ShapeDtypeStruct((256, 4096), jnp.float32),
+        ).compile()
+        return analyze_hlo(comp.as_text()).flops
+
+    f_off = flops_of(lambda a, b: regs.r_off(regs.cross_correlation_matrix(a, b, scale=256)))
+    f_sum = flops_of(lambda a, b: regs.r_sum(a, b, q=2, scale=256.0))
+    print(f"[2] compiled FLOPs at n=256, d=4096:  R_off={f_off:.2e}  "
+          f"R_sum={f_sum:.2e}  ({f_off/max(f_sum,1):.0f}x fewer)")
+
+    # --- 3. train with the proposed loss ------------------------------------
+    model = SSLModelConfig(input_dim=256, backbone_widths=(128,), projector_widths=(128, 128))
+    data = SSLDataConfig(input_dim=256, batch=128)
+    loss_cfg = L.DecorrConfig(style="bt", reg="sum", q=2, lam=0.01, permute=True)
+    params = init_ssl_params(jax.random.PRNGKey(1), model)
+    opt = adamw(weight_decay=0.0)
+    state = create_train_state(params, opt)
+    step_fn, _ = make_ssl_train_step(model, loss_cfg, opt, warmup_cosine(2e-3, 10, 200))
+    step_fn = jax.jit(step_fn)
+    print("[3] training Barlow Twins-style with R_sum (+ feature permutation):")
+    for i in range(200):
+        v1, v2 = ssl_batch(data, i)
+        state, m = step_fn(state, {"view1": jnp.asarray(v1), "view2": jnp.asarray(v2)})
+        if (i + 1) % 50 == 0:
+            v1e, v2e = ssl_batch(data, 10_000)
+            q16 = L.normalized_bt_regularizer(embed(state.params, jnp.asarray(v1e)),
+                                              embed(state.params, jnp.asarray(v2e)))
+            print(f"    step {i+1:4d}  loss={float(m['bt_loss']):8.4f}  "
+                  f"normalized R_off (Eq.16)={float(q16):.4f}")
+    print("done — the Eq.16 metric (what Barlow Twins itself optimizes) drops"
+          " even though we never materialized a d x d matrix.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro — FFT-decorrelation training/serving framework for TPU pods.
+
+Reproduction + TPU-native extension of "Learning Decorrelated Representations
+Efficiently Using Fast Fourier Transform" (Shigeto et al., 2023).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,8 @@
+from repro.checkpoint.checkpointer import (
+    save_checkpoint,
+    restore_checkpoint,
+    latest_step,
+    list_steps,
+    AsyncCheckpointer,
+)
+from repro.checkpoint.manager import CheckpointManager

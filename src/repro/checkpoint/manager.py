@@ -1,0 +1,68 @@
+"""Checkpoint lifecycle: keep-N retention, interval policy, auto-resume."""
+
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+from repro.checkpoint.checkpointer import (
+    AsyncCheckpointer,
+    latest_step,
+    list_steps,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        ckpt_dir: str,
+        interval: int = 100,
+        keep: int = 3,
+        use_async: bool = True,
+    ):
+        self.ckpt_dir = ckpt_dir
+        self.interval = interval
+        self.keep = keep
+        self._async = AsyncCheckpointer() if use_async else None
+        os.makedirs(ckpt_dir, exist_ok=True)
+        # clean torn writes from a previous crashed process (safe here:
+        # no saves of ours are in flight yet)
+        for name in os.listdir(ckpt_dir):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.interval == 0
+
+    def save(self, step: int, state, force: bool = False):
+        if not (force or self.should_save(step)):
+            return None
+        if self._async is not None:
+            fut = self._async.save(self.ckpt_dir, step, state)
+        else:
+            fut = save_checkpoint(self.ckpt_dir, step, state)
+        self._gc()
+        return fut
+
+    def _gc(self):
+        steps = list_steps(self.ckpt_dir)
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def restore_latest(self, template, shardings=None) -> Tuple[Optional[Any], int]:
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return None, 0
+        state = restore_checkpoint(self.ckpt_dir, step, template, shardings)
+        return state, step
+
+    def wait(self):
+        if self._async is not None:
+            self._async.wait()

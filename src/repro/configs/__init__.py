@@ -1,0 +1,33 @@
+"""Architecture registry: one module per assigned arch + the paper's own SSL
+config.  ``get_config(name)`` / ``list_archs()`` are the public API;
+``--arch <id>`` in the launchers resolves through here."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+_ARCHS = {
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "qwen1.5-110b": "repro.configs.qwen1_5_110b",
+    "nemotron-4-340b": "repro.configs.nemotron4_340b",
+    "codeqwen1.5-7b": "repro.configs.codeqwen1_5_7b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "ssl-paper": "repro.configs.ssl_paper",
+}
+
+
+def list_archs() -> List[str]:
+    return [k for k in _ARCHS if k != "ssl-paper"]
+
+
+def get_config(name: str):
+    if name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCHS)}")
+    mod = importlib.import_module(_ARCHS[name])
+    return mod.config()

@@ -1,0 +1,22 @@
+"""CodeQwen1.5-7B [hf:Qwen/CodeQwen1.5-7B; hf].  32L d=4096 32H (GQA kv=32 =
+MHA) d_ff=13440 vocab=92416 — qwen1.5 arch, QKV bias."""
+
+from repro.models.common import ArchConfig, BlockSpec
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="codeqwen1.5-7b",
+        family="dense",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=13440,
+        vocab_size=92416,
+        pattern=(BlockSpec(mixer="attn", ffn="dense"),),
+        qkv_bias=True,
+        rope_theta=1e6,
+        tie_embeddings=False,
+        source="hf:Qwen/CodeQwen1.5-7B; hf",
+    )

@@ -1,0 +1,25 @@
+"""MusicGen-large [arXiv:2306.05284; hf].  48L d=2048 32H (MHA) d_ff=8192
+vocab=2048 — decoder-only over EnCodec tokens.  The EnCodec frontend is a
+STUB per the assignment: inputs are (B, S, n_q=4) codebook token ids; the
+backbone sums per-codebook embeddings and predicts 4 parallel heads."""
+
+from repro.models.common import ArchConfig, BlockSpec
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="musicgen-large",
+        family="audio",
+        n_layers=48,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab_size=2048,
+        pattern=(BlockSpec(mixer="attn", ffn="dense"),),
+        activation="gelu",
+        frontend="audio_codes",
+        n_codebooks=4,
+        tie_embeddings=False,
+        source="arXiv:2306.05284; hf",
+    )

@@ -1,0 +1,19 @@
+"""The paper's own SSL setting: Siamese backbone + 3-layer MLP projector,
+Barlow Twins / VICReg / proposed losses.  The backbone here is a compact
+conv-free patch MLP (the paper's ResNets are orthogonal to its
+contribution); projector widths d in {2048 ... 16384} as in Fig. 2."""
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SSLConfig:
+    input_dim: int = 3 * 32 * 32
+    backbone_widths: Tuple[int, ...] = (512, 512)
+    projector_widths: Tuple[int, ...] = (2048, 2048, 2048)
+    batch_size: int = 256
+
+
+def config() -> SSLConfig:
+    return SSLConfig()

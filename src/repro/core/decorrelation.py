@@ -1,0 +1,95 @@
+"""Decorrelation as a first-class training feature for the LM architectures.
+
+The paper's regularizer is feature-space, not architecture-space, so the
+framework attaches it to any model as an *auxiliary loss* on hidden states
+(DESIGN.md §5): VICReg-style covariance regularization (single view — no
+augmentation pair needed for LMs) on a strided subsample of final hidden
+states.
+
+    L = L_ce + mu/d * R_var(K(H)) + nu/d * R(K(H))
+
+with R = R_sum / R_sum^(b) via FFT — O(n d log d) on top of a 6 N D training
+step, invisible in the roofline (quantified in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses as losses_lib
+from repro.core import permutation as perm_lib
+from repro.core import regularizers as regs
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LMDecorrConfig:
+    """Auxiliary decorrelation on LM hidden states.
+
+    enabled:        off by default; archs opt in via their config.
+    tokens_per_seq: subsample stride target — caps the statistic's batch at
+                    batch * tokens_per_seq rows (keeps the loss O(n d log d)
+                    with a bounded n even at seq 32k).
+    """
+
+    enabled: bool = False
+    decorr: losses_lib.DecorrConfig = dataclasses.field(
+        default_factory=lambda: losses_lib.DecorrConfig(style="vic", reg="sum")
+    )
+    tokens_per_seq: int = 8
+    mu: float = 1.0
+    nu: float = 0.04
+
+    def validate(self) -> "LMDecorrConfig":
+        self.decorr.validate()
+        assert self.tokens_per_seq >= 1
+        return self
+
+
+def subsample_tokens(h: Array, tokens_per_seq: int) -> Array:
+    """(B, S, D) -> (B * min(S, tokens_per_seq), D), strided & static."""
+    b, s, d = h.shape
+    take = min(s, tokens_per_seq)
+    stride = max(1, s // take)
+    sub = h[:, :: stride, :][:, :take, :]
+    return sub.reshape(b * take, d)
+
+
+def lm_decorrelation_loss(
+    hidden: Array,
+    cfg: LMDecorrConfig,
+    perm_key: Optional[Array] = None,
+) -> tuple[Array, Dict[str, Array]]:
+    """Covariance decorrelation aux loss on hidden states (single view).
+
+    ``hidden``: (B, S, D) final hidden states (pre-LM-head).
+    Returns (aux_loss, metrics); aux_loss == 0 when disabled.
+    """
+    cfg.validate()
+    if not cfg.enabled:
+        zero = jnp.asarray(0.0, jnp.float32)
+        return zero, {"decorr_aux": zero}
+
+    z = subsample_tokens(hidden, cfg.tokens_per_seq)
+    n, d = z.shape
+    zc = losses_lib.center(z)
+
+    var = regs.r_var_from_embeddings(zc + 0.0, cfg.decorr.gamma)
+
+    if cfg.decorr.permute and perm_key is not None and cfg.decorr.reg == "sum":
+        zc, _ = perm_lib.permute_views(perm_key, zc)
+
+    scale = float(max(n - 1, 1))
+    reg = losses_lib._decorrelating_term(zc, zc, cfg.decorr, scale=scale)
+
+    aux = (cfg.mu / d) * var + (cfg.nu / d) * reg
+    return aux, {
+        "decorr_aux": aux,
+        "decorr_var": var,
+        "decorr_reg": reg,
+    }

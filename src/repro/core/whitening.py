@@ -1,0 +1,65 @@
+"""Whitening-based decorrelation baseline (paper §2, W-MSE / Zero-CL
+family): explicitly whiten features with an inverse covariance square root
+instead of regularizing.
+
+Included for baseline completeness: the paper's complexity argument is that
+whitening needs the full eigendecomposition of a d x d covariance —
+O(min(d n^2, n d^2)) per step plus an O(d^3) eigh — which is exactly what
+R_sum avoids.  We implement ZCA whitening with a Newton–Schulz iteration
+(matmul-only inverse square root — TPU-friendly, no eigh) and the W-MSE
+style loss, so benchmarks can quote the whitening cost next to R_off/R_sum.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def newton_schulz_inv_sqrt(mat: Array, iters: int = 7, eps: float = 1e-5) -> Array:
+    """Matmul-only inverse matrix square root of an SPD matrix.
+
+    Coupled Newton-Schulz: Y_{k+1} = 0.5 Y_k (3I - Z_k Y_k),
+    Z_{k+1} = 0.5 (3I - Z_k Y_k) Z_k with Y_0 = A/||A||, Z_0 = I converges to
+    Y -> A^{1/2}/sqrt(||A||), Z -> A^{-1/2} sqrt(||A||).
+    """
+    d = mat.shape[-1]
+    ident = jnp.eye(d, dtype=jnp.float32)
+    a = mat.astype(jnp.float32) + eps * ident
+    norm = jnp.linalg.norm(a)
+    y = a / norm
+    z = ident
+
+    def body(_, yz):
+        y, z = yz
+        t = 0.5 * (3.0 * ident - z @ y)
+        return y @ t, t @ z
+
+    y, z = jax.lax.fori_loop(0, iters, body, (y, z))
+    return z / jnp.sqrt(norm)
+
+
+def zca_whiten(z: Array, eps: float = 1e-5, iters: int = 7) -> Array:
+    """Whiten (n, d) embeddings: output has (approximately) identity
+    covariance.  O(n d^2 + d^3-via-matmuls) — the cost the paper's O(nd log d)
+    regularizer avoids."""
+    n, d = z.shape
+    zc = z.astype(jnp.float32) - jnp.mean(z, axis=0, keepdims=True)
+    cov = (zc.T @ zc) / max(n - 1, 1)
+    w = newton_schulz_inv_sqrt(cov, iters=iters, eps=eps)
+    return zc @ w
+
+
+def wmse_loss(z1: Array, z2: Array, eps: float = 1e-5) -> Tuple[Array, dict]:
+    """W-MSE-style loss: whiten each view, then align (MSE on normalized
+    whitened embeddings)."""
+    w1 = zca_whiten(z1, eps)
+    w2 = zca_whiten(z2, eps)
+    w1 = w1 / (jnp.linalg.norm(w1, axis=-1, keepdims=True) + 1e-9)
+    w2 = w2 / (jnp.linalg.norm(w2, axis=-1, keepdims=True) + 1e-9)
+    loss = jnp.mean(jnp.sum((w1 - w2) ** 2, axis=-1))
+    return loss, {"wmse_loss": loss}

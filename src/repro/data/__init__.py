@@ -1,0 +1,2 @@
+from repro.data.synthetic import LMDataConfig, SSLDataConfig, lm_batch, ssl_batch, lm_iterator, ssl_iterator
+from repro.data.pipeline import ShardedPrefetcher

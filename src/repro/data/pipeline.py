@@ -1,0 +1,74 @@
+"""Host data pipeline: background prefetch + device placement with the
+global-batch sharding.
+
+``ShardedPrefetcher`` wraps any numpy-batch iterator: a worker thread keeps
+``depth`` batches ahead (overlapping host data generation with device step
+time), and each batch is ``jax.device_put`` with the batch NamedSharding so
+per-device slices are laid out before the step is dispatched.  On multi-host
+pods the same code path uses ``jax.make_array_from_process_local_data``.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+
+class ShardedPrefetcher:
+    def __init__(
+        self,
+        it: Iterator[Any],
+        sharding: Optional[NamedSharding] = None,
+        depth: int = 2,
+    ):
+        self._it = it
+        self._sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch):
+        if self._sharding is None:
+            return batch
+        if jax.process_count() > 1:  # multi-host path
+            return jax.tree.map(
+                lambda x: jax.make_array_from_process_local_data(self._sharding, x),
+                batch,
+            )
+        return jax.tree.map(lambda x: jax.device_put(x, self._sharding), batch)
+
+    def _worker(self):
+        try:
+            for batch in self._it:
+                if self._stop.is_set():
+                    return
+                self._q.put(self._place(batch))
+        except BaseException as e:  # surfaced on next __next__
+            self._err = e
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

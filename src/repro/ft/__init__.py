@@ -1,0 +1,2 @@
+from repro.ft.watchdog import StragglerWatchdog, PreemptionSignal, with_retries
+from repro.ft.elastic import reshard_to_mesh, elastic_restore

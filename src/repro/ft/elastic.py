@@ -1,0 +1,62 @@
+"""Elastic re-mesh: restore a checkpoint onto a *different* device count /
+mesh shape.
+
+Checkpoints store dtype/shape-preserving host buffers (checkpoint/), so the
+mesh geometry is a restore-time decision: we rebuild the sharding pytree for
+the new mesh from the same logical rules and ``jax.device_put`` each leaf.
+Divisibility mismatches on the new mesh fall back to replication for that
+leaf (GSPMD also tolerates uneven shards, but explicit fallback keeps the
+behavior predictable).
+
+At 1000-node scale the same logic runs per-host over addressable shards; the
+logical-axis indirection (parallel/sharding.py) is what makes the checkpoint
+mesh-geometry-free.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.checkpoint.checkpointer import restore_checkpoint
+
+
+def _divisible(shape, spec: PartitionSpec, mesh: Mesh) -> bool:
+    for dim, part in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if part is None:
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % n != 0:
+            return False
+    return True
+
+
+def reshard_to_mesh(state: Any, mesh: Mesh, spec_fn: Callable[[tuple, Any], PartitionSpec]):
+    """Place every leaf of ``state`` on ``mesh`` using ``spec_fn(path, leaf)``."""
+
+    def place(path, leaf):
+        arr = np.asarray(jax.device_get(leaf))
+        spec = spec_fn(path, arr)
+        if spec is None or not _divisible(arr.shape, spec, mesh):
+            spec = PartitionSpec()
+        return jax.device_put(arr, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(place, state)
+
+
+def elastic_restore(
+    ckpt_dir: str,
+    step: int,
+    template: Any,
+    new_mesh: Mesh,
+    spec_fn: Optional[Callable] = None,
+):
+    """Restore a checkpoint written under any previous mesh onto new_mesh."""
+    host_state = restore_checkpoint(ckpt_dir, step, template)
+    if spec_fn is None:
+        spec_fn = lambda path, leaf: PartitionSpec()
+    return reshard_to_mesh(host_state, new_mesh, spec_fn)

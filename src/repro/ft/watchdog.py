@@ -1,0 +1,94 @@
+"""Fault-tolerance runtime: straggler detection, preemption handling,
+transient-failure retry.
+
+On real pods the heartbeat store is a distributed KV (or jax coordination
+service); here it is process-local but the policy logic — rolling-median
+step-time outlier detection, preemption-flag draining, bounded retry with
+backoff — is exactly what the loop would run at scale.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from collections import deque
+from typing import Callable, Optional
+
+
+class StragglerWatchdog:
+    """Flags steps slower than ``factor`` x rolling median (straggler
+    mitigation hook: at scale the action is to re-shard around the slow
+    host / trigger elastic re-mesh; here we count and expose the signal)."""
+
+    def __init__(self, window: int = 32, factor: float = 3.0, min_samples: int = 8):
+        self.durations: deque = deque(maxlen=window)
+        self.factor = factor
+        self.min_samples = min_samples
+        self.straggler_events = 0
+        self._t0: Optional[float] = None
+
+    def step_start(self):
+        self._t0 = time.perf_counter()
+
+    def step_end(self) -> bool:
+        """Returns True if this step was a straggler."""
+        dt = time.perf_counter() - self._t0
+        is_straggler = False
+        if len(self.durations) >= self.min_samples:
+            med = sorted(self.durations)[len(self.durations) // 2]
+            if dt > self.factor * med:
+                self.straggler_events += 1
+                is_straggler = True
+        self.durations.append(dt)
+        return is_straggler
+
+    @property
+    def median(self) -> float:
+        if not self.durations:
+            return 0.0
+        return sorted(self.durations)[len(self.durations) // 2]
+
+
+class PreemptionSignal:
+    """File-flag preemption notice (SIGTERM handler writes it; tests touch
+    it).  The train loop checks every step and exits through a final
+    checkpoint when raised."""
+
+    def __init__(self, flag_path: str):
+        self.flag_path = flag_path
+
+    def raised(self) -> bool:
+        return os.path.exists(self.flag_path)
+
+    def set(self):
+        with open(self.flag_path, "w") as f:
+            f.write("preempt")
+
+    def clear(self):
+        if os.path.exists(self.flag_path):
+            os.remove(self.flag_path)
+
+
+def with_retries(
+    fn: Callable,
+    max_retries: int = 3,
+    backoff_s: float = 0.05,
+    retryable=(RuntimeError,),
+    on_retry: Optional[Callable[[int, BaseException], None]] = None,
+):
+    """Bounded-retry wrapper for transient device/step failures."""
+
+    def wrapped(*args, **kwargs):
+        attempt = 0
+        while True:
+            try:
+                return fn(*args, **kwargs)
+            except retryable as e:
+                attempt += 1
+                if attempt > max_retries:
+                    raise
+                if on_retry:
+                    on_retry(attempt, e)
+                time.sleep(backoff_s * (2 ** (attempt - 1)))
+
+    return wrapped

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the decorrelation hot spots.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd,
+differentiable wrapper), ref.py (pure-jnp oracle).  Validated in
+interpret mode on CPU; targeted at TPU v5e (MXU 128x128, VMEM ~16 MiB).
+"""

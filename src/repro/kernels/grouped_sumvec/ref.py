@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the grouped sumvec regularizer.
+
+Deliberately *independent* of repro.core: builds the full cross-correlation
+matrix C = (1/scale) Z1^T Z2, extracts every b x b block, computes each
+block's summary vector by explicit wrapped-diagonal sums (paper Eq. 5), and
+evaluates Eq. 13 term-by-term.  O(n d^2) — used only to validate kernels.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _sumvec_matrix(c):
+    b = c.shape[-1]
+    i = jnp.arange(b)[:, None]
+    j = jnp.arange(b)[None, :]
+    cols = (i + j) % b
+    return jnp.sum(c[j, cols], axis=-1)
+
+
+def grouped_sumvec_ref(z1, z2, block_size, scale=1.0):
+    """Returns (nb, nb, b) time-domain summary vectors of every block."""
+    n, d = z1.shape
+    rem = (-d) % block_size
+    z1 = jnp.pad(z1.astype(jnp.float32), ((0, 0), (0, rem)))
+    z2 = jnp.pad(z2.astype(jnp.float32), ((0, 0), (0, rem)))
+    c = (z1.T @ z2) / scale
+    dp = c.shape[-1]
+    nb = dp // block_size
+    blocks = c.reshape(nb, block_size, nb, block_size).transpose(0, 2, 1, 3)
+    out = jnp.zeros((nb, nb, block_size), jnp.float32)
+    for i in range(nb):
+        for j in range(nb):
+            out = out.at[i, j].set(_sumvec_matrix(blocks[i, j]))
+    return out
+
+
+def r_sum_grouped_ref(z1, z2, block_size, q=2, scale=1.0):
+    """Eq. (13) from the explicit matrix route."""
+    sv = grouped_sumvec_ref(z1, z2, block_size, scale)
+    nb = sv.shape[0]
+    vals = jnp.abs(sv) if q == 1 else sv**2
+    total = jnp.sum(vals)
+    diag_zeroth = jnp.sum(jnp.diagonal(vals[..., 0]))
+    return total - diag_zeroth
+
+
+def r_sum_ref(z1, z2, q=2, scale=1.0):
+    """Ungrouped Eq. (6) oracle (single block of size d)."""
+    n, d = z1.shape
+    c = (z1.astype(jnp.float32).T @ z2.astype(jnp.float32)) / scale
+    sv = _sumvec_matrix(c)
+    tail = sv[1:]
+    return jnp.sum(jnp.abs(tail)) if q == 1 else jnp.sum(tail**2)

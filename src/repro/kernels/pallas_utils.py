@@ -1,0 +1,87 @@
+"""Shared Pallas/TPU helpers: padding, tiling, interpret-mode dispatch.
+
+TPU tiling rules baked in here:
+  * lane (last) dim of every VMEM block is a multiple of 128,
+  * sublane (second-to-last) a multiple of 8 for f32.
+Inputs are zero-padded up to tile multiples in the op wrappers — all our
+contractions are linear, so zero padding never changes results, and outputs
+are sliced back.
+
+``INTERPRET`` is True on CPU backends: kernels execute their Python bodies
+(the Pallas interpreter), which validates the kernel logic on this container;
+on a real TPU the same code lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INTERPRET = jax.default_backend() == "cpu"
+
+LANE = 128
+SUBLANE = 8
+
+
+def next_multiple(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_axis(x, axis: int, target: int):
+    """Zero-pad ``axis`` of x up to length ``target``."""
+    cur = x.shape[axis]
+    if cur == target:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - cur)
+    return jnp.pad(x, pad)
+
+
+def pad_to_tiles(x, tile_by_axis: dict[int, int]):
+    for axis, tile in tile_by_axis.items():
+        x = pad_axis(x, axis, next_multiple(x.shape[axis], tile))
+    return x
+
+
+def dft_matrices(d: int, dtype=jnp.float32):
+    """Real/imag rfft basis: F[f] = sum_t z[t] * (Cr[t,f] + i Ci[t,f]).
+
+    Cr[t, f] = cos(2 pi t f / d);  Ci[t, f] = -sin(2 pi t f / d).
+    Shapes (d, d//2 + 1).
+    """
+    nf = d // 2 + 1
+    t = np.arange(d)[:, None]
+    f = np.arange(nf)[None, :]
+    ang = 2.0 * np.pi * t * f / d
+    return jnp.asarray(np.cos(ang), dtype), jnp.asarray(-np.sin(ang), dtype)
+
+
+def full_dft_matrices(d: int, sign: int = -1, dtype=jnp.float32):
+    """Full complex DFT basis W[t, f] = exp(sign * 2 pi i t f / d) as (re, im)."""
+    t = np.arange(d)[:, None]
+    f = np.arange(d)[None, :]
+    ang = 2.0 * np.pi * t * f / d * sign
+    return jnp.asarray(np.cos(ang), dtype), jnp.asarray(np.sin(ang), dtype)
+
+
+def irfft_basis(d: int, dtype=jnp.float32):
+    """Synthesis basis: s[t] = sum_f  Br[f, t] * Gr[f] + Bi[f, t] * Gi[f].
+
+    Derived from s = irfft(G):  s[t] = (1/d) sum_f w_f (Gr cos(2pi ft/d)
+    - Gi sin(2pi ft/d)), w_f the rfft duplication weights.
+    Shapes (d//2+1, d).
+    """
+    nf = d // 2 + 1
+    w = np.full((nf,), 2.0)
+    w[0] = 1.0
+    if d % 2 == 0:
+        w[-1] = 1.0
+    f = np.arange(nf)[:, None]
+    t = np.arange(d)[None, :]
+    ang = 2.0 * np.pi * f * t / d
+    br = (w[:, None] * np.cos(ang)) / d
+    bi = (-w[:, None] * np.sin(ang)) / d
+    return jnp.asarray(br, dtype), jnp.asarray(bi, dtype)

@@ -1,0 +1,8 @@
+from repro.kernels.sumvec_fft.ops import (
+    r_sum_fourstep,
+    sumvec_fourstep,
+    four_step_fft,
+    four_step_ifft,
+    frequency_accumulator_fourstep,
+    choose_factors,
+)

@@ -1,0 +1,137 @@
+"""Four-step-FFT sumvec: jit'd wrappers over the kernels.
+
+Layout discipline (see kernel.py docstring): with t = t1*d2 + t2 and
+f = k1 + d1*k2,
+
+  x (n, d) -> (n, d1, d2)                                  [t1, t2]
+  step 1: contract t1 with W_{d1}  -> (n, d2, d1)          [t2, k1]
+  step 2: twiddle W_d^{t2 k1}      -> (n, d2, d1)          [t2, k1]
+  step 3: contract t2 with W_{d2}  -> (n, d1, d2)          [k1, k2]
+
+The frequency accumulator G = sum_k conj(F1_k) o F2_k is computed in the
+[k1, k2] layout; for q = 2 the regularizer only needs full-spectrum sums
+(Parseval), which are layout-invariant, so no unscramble transpose is ever
+materialized.  For q = 1 an inverse four-step produces the time-domain
+summary vector.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.pallas_utils import full_dft_matrices
+from repro.kernels.sumvec_fft import kernel as K
+
+Array = jax.Array
+
+
+def choose_factors(d: int) -> tuple[int, int]:
+    """d = d1 * d2 with d1 <= d2, d1 as close to sqrt(d) as possible."""
+    best = (1, d)
+    for d1 in range(1, int(np.sqrt(d)) + 1):
+        if d % d1 == 0:
+            best = (d1, d // d1)
+    return best
+
+
+def _twiddle(d1: int, d2: int, sign: int) -> tuple[Array, Array]:
+    """W_d^{sign * t2 * k1} flattened to (d2 * d1,) in [t2, k1] order."""
+    d = d1 * d2
+    t2 = np.arange(d2)[:, None]
+    k1 = np.arange(d1)[None, :]
+    ang = 2.0 * np.pi * t2 * k1 / d * sign
+    return (
+        jnp.asarray(np.cos(ang).reshape(-1), jnp.float32),
+        jnp.asarray(np.sin(ang).reshape(-1), jnp.float32),
+    )
+
+
+def four_step_fft(x: Array, d1: int, d2: int) -> tuple[Array, Array]:
+    """Full complex DFT of real rows x (n, d). Returns (n, d1, d2) pair in
+    [k1, k2] layout (f = k1 + d1*k2)."""
+    n, d = x.shape
+    assert d == d1 * d2, (d, d1, d2)
+    w1r, w1i = full_dft_matrices(d1, sign=-1)
+    w2r, w2i = full_dft_matrices(d2, sign=-1)
+    twr, twi = _twiddle(d1, d2, sign=-1)
+
+    xt = x.reshape(n, d1, d2).transpose(0, 2, 1).reshape(n * d2, d1)  # [t2, t1]
+    s1r, s1i = K.rmatmul_complex_basis(xt.astype(jnp.float32), w1r, w1i)  # [t2, k1]
+    s2r, s2i = K.ctwiddle(s1r.reshape(n, d2 * d1), s1i.reshape(n, d2 * d1), twr, twi)
+    s2r = s2r.reshape(n, d2, d1).transpose(0, 2, 1).reshape(n * d1, d2)  # [k1, t2]
+    s2i = s2i.reshape(n, d2, d1).transpose(0, 2, 1).reshape(n * d1, d2)
+    s3r, s3i = K.cmatmul(s2r, s2i, w2r, w2i)  # contract t2 -> [k1, k2]
+    return s3r.reshape(n, d1, d2), s3i.reshape(n, d1, d2)
+
+
+def four_step_ifft(gr: Array, gi: Array, d1: int, d2: int) -> Array:
+    """Inverse DFT of (..., d1, d2) [k1, k2]-layout spectrum; returns the
+    real part in natural time order (..., d) (imag is ~0 for our G)."""
+    lead = gr.shape[:-2]
+    n = int(np.prod(lead)) if lead else 1
+    d = d1 * d2
+    w1r, w1i = full_dft_matrices(d1, sign=+1)
+    w2r, w2i = full_dft_matrices(d2, sign=+1)
+    twr, twi = _twiddle(d1, d2, sign=+1)
+
+    g2r = gr.reshape(n * d1, d2)
+    g2i = gi.reshape(n * d1, d2)
+    s1r, s1i = K.cmatmul(g2r, g2i, w2r, w2i)  # contract k2 -> [k1, t2]
+    s1r = s1r.reshape(n, d1, d2).transpose(0, 2, 1).reshape(n, d2 * d1)  # [t2, k1]
+    s1i = s1i.reshape(n, d1, d2).transpose(0, 2, 1).reshape(n, d2 * d1)
+    s2r, s2i = K.ctwiddle(s1r, s1i, twr, twi)
+    s2r = s2r.reshape(n * d2, d1)
+    s2i = s2i.reshape(n * d2, d1)
+    s3r, _ = K.cmatmul(s2r, s2i, w1r, w1i)  # contract k1 -> [t2, t1]
+    out = s3r.reshape(n, d2, d1).transpose(0, 2, 1).reshape(*lead, d) / d
+    return out
+
+
+def frequency_accumulator_fourstep(z1: Array, z2: Array, d1: int, d2: int):
+    """G = sum_k conj(F z1_k) o (F z2_k), (d1, d2) [k1,k2] layout pair."""
+    f1r, f1i = four_step_fft(z1, d1, d2)
+    f2r, f2i = four_step_fft(z2, d1, d2)
+    gr = jnp.sum(f1r * f2r + f1i * f2i, axis=0)
+    gi = jnp.sum(f1r * f2i - f1i * f2r, axis=0)
+    return gr, gi
+
+
+@functools.partial(jax.jit, static_argnames=("q", "scale"))
+def r_sum_fourstep(
+    z1: Array, z2: Array, *, q: int = 2, scale: Optional[float] = None
+) -> Array:
+    """Ungrouped Eq. (6) through the four-step Pallas pipeline."""
+    n, d = z1.shape
+    d1, d2 = choose_factors(d)
+    s = 1.0 if scale is None else float(scale)
+    gr, gi = frequency_accumulator_fourstep(
+        z1.astype(jnp.float32), z2.astype(jnp.float32), d1, d2
+    )
+    gr, gi = gr / s, gi / s
+    if q == 2:
+        # Full-spectrum Parseval: sum_t sv[t]^2 = (1/d) sum_f |G_f|^2,
+        # sv[0] = (1/d) sum_f Re G_f — layout invariant.
+        sq = jnp.sum(gr**2 + gi**2) / d
+        s0 = jnp.sum(gr) / d
+        return sq - s0**2
+    sv = four_step_ifft(gr, gi, d1, d2)  # (1?, d) natural order
+    sv = sv.reshape(d)
+    return jnp.sum(jnp.abs(sv[1:]))
+
+
+def sumvec_fourstep(z1: Array, z2: Array, scale: Optional[float] = None) -> Array:
+    """Time-domain sumvec via four-step fwd+inv (kernel analogue of Eq. 12)."""
+    n, d = z1.shape
+    d1, d2 = choose_factors(d)
+    gr, gi = frequency_accumulator_fourstep(
+        z1.astype(jnp.float32), z2.astype(jnp.float32), d1, d2
+    )
+    sv = four_step_ifft(gr, gi, d1, d2).reshape(d)
+    if scale is not None:
+        sv = sv / scale
+    return sv

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the four-step sumvec kernels.
+
+Independent of repro.core: direct circular correlation sums (Appendix A) and
+numpy-FFT spectra, used to validate both the spectrum layout and the
+regularizer values of the Pallas pipeline.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sumvec_ref(z1, z2, scale=1.0):
+    """sumvec(C) by direct O(n d^2) circular-correlation sums."""
+    n, d = z1.shape
+    z1 = z1.astype(jnp.float32)
+    z2 = z2.astype(jnp.float32)
+    i = jnp.arange(d)[:, None]
+    j = jnp.arange(d)[None, :]
+    gather = (i + j) % d  # (d_out, d_in)
+    # sum_k sum_j z1[k, j] * z2[k, (i + j) % d]
+    return jnp.einsum("kj,kij->i", z1, z2[:, gather]) / scale
+
+
+def r_sum_ref(z1, z2, q=2, scale=1.0):
+    sv = sumvec_ref(z1, z2, scale)
+    tail = sv[1:]
+    return jnp.sum(jnp.abs(tail)) if q == 1 else jnp.sum(tail**2)
+
+
+def spectrum_ref(x):
+    """Full complex DFT of real rows (n, d) -> complex (n, d), natural order."""
+    return jnp.fft.fft(x.astype(jnp.float32), axis=-1)

@@ -1,0 +1,2 @@
+from repro.kernels.xcorr_offdiag.ops import off_diagonal_sq_sum, r_off_gram
+from repro.kernels.xcorr_offdiag.ref import off_diagonal_sq_sum_ref

@@ -1,0 +1,78 @@
+"""Off-diagonal penalty: fused Pallas forward + Gram-trick backward.
+
+Beyond-paper insight (DESIGN.md, EXPERIMENTS.md §Perf): the *gradient* of
+R_off never needs the d x d matrix either.  With C = (1/s) Z1^T Z2,
+
+    dR/dZ1 = (2/s) Z2 (C - diag C)^T
+           = (2/s^2) (Z2 Z2^T) Z1 - (2/s) Z2 * c_diag
+
+— an n x n Gram matrix route costing O(n^2 d), a factor d/n cheaper than the
+textbook O(n d^2) whenever the batch is smaller than the width (n = 256 vs
+d = 8192: 32x).  The same identity gives an O(n^2 d) *forward*
+(``r_off_gram``), used as the strengthened baseline in benchmarks.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.xcorr_offdiag.kernel import off_diagonal_sq_sum_raw
+
+Array = jax.Array
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _off_diag_sq_sum(z1: Array, z2: Array, scale: float) -> Array:
+    return off_diagonal_sq_sum_raw(z1, z2) / (scale * scale)
+
+
+def _fwd(z1, z2, scale):
+    return _off_diag_sq_sum(z1, z2, scale), (z1, z2)
+
+
+def _bwd(scale, res, g):
+    z1, z2 = res
+    z1 = z1.astype(jnp.float32)
+    z2 = z2.astype(jnp.float32)
+    s = float(scale)
+    c_diag = jnp.sum(z1 * z2, axis=0) / s  # (d,)
+    n, d = z1.shape
+    if n <= d:
+        gram2 = z2 @ z2.T  # (n, n)
+        gram1 = z1 @ z1.T
+        dz1 = (2.0 / s**2) * (gram2 @ z1) - (2.0 / s) * z2 * c_diag
+        dz2 = (2.0 / s**2) * (gram1 @ z2) - (2.0 / s) * z1 * c_diag
+    else:
+        c = (z1.T @ z2) / s
+        coff = c - jnp.diag(jnp.diagonal(c))
+        dz1 = (2.0 / s) * (z2 @ coff.T)
+        dz2 = (2.0 / s) * (z1 @ coff)
+    return g * dz1, g * dz2
+
+
+_off_diag_sq_sum.defvjp(_fwd, _bwd)
+
+
+def off_diagonal_sq_sum(z1: Array, z2: Array, *, scale: Optional[float] = None) -> Array:
+    """R_off(C) with C = (1/scale) Z1^T Z2 — fused kernel fwd, Gram bwd."""
+    s = 1.0 if scale is None else float(scale)
+    return _off_diag_sq_sum(z1, z2, s)
+
+
+def r_off_gram(z1: Array, z2: Array, *, scale: Optional[float] = None) -> Array:
+    """O(n^2 d) forward for R_off via Gram matrices (strengthened baseline).
+
+    ||C||_F^2 = (1/s^2) tr(Z2^T Z1 Z1^T Z2) = (1/s^2) <Z1 Z1^T, Z2 Z2^T>.
+    """
+    s = 1.0 if scale is None else float(scale)
+    z1 = z1.astype(jnp.float32)
+    z2 = z2.astype(jnp.float32)
+    g1 = z1 @ z1.T
+    g2 = z2 @ z2.T
+    fro = jnp.sum(g1 * g2) / (s * s)
+    c_diag = jnp.sum(z1 * z2, axis=0) / s
+    return fro - jnp.sum(c_diag**2)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused off-diagonal kernel: materialize C, square,
+mask the diagonal, sum."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def off_diagonal_sq_sum_ref(z1, z2, scale=1.0):
+    c = (z1.astype(jnp.float32).T @ z2.astype(jnp.float32)) / scale
+    sq = c * c
+    return jnp.sum(sq) - jnp.sum(jnp.diagonal(sq))

@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) cell; record memory_analysis / cost_analysis / collective-bytes.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun_results
+
+The first two lines of this file (before ANY other import) force 512
+placeholder CPU devices so ``jax.make_mesh`` can build the production
+meshes; nothing is ever allocated — inputs are ShapeDtypeStructs.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config, list_archs  # noqa: E402
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.transformer import forward  # noqa: E402
+from repro.optim import adamw, warmup_cosine  # noqa: E402
+from repro.parallel.sharding import sharding_context  # noqa: E402
+from repro.train.serve import make_decode_step, make_prefill_step  # noqa: E402
+from repro.train.step import make_train_step  # noqa: E402
+from repro.train.train_state import TrainState  # noqa: E402
+
+def num_microbatches_for(cfg, shape: S.ShapeSpec, mesh) -> int:
+    if shape.kind != "train":
+        return 1
+    n_data = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n_data *= mesh.shape[a]
+    per_dev = max(1, shape.global_batch // n_data)
+    params_b = cfg.param_count() / 1e9
+    target_per_dev = 1 if params_b > 30 else (4 if params_b > 4 else per_dev)
+    micro = max(1, per_dev // target_per_dev)
+    while shape.global_batch % micro != 0:
+        micro -= 1
+    return micro
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Returns (fn, example_args, meta) ready for jit(fn).lower(*args)."""
+    cfg = get_config(arch)
+    shape = S.SHAPES[shape_name]
+    ok, why = S.cell_applicable(cfg, shape)
+    if not ok:
+        return None, None, {"skip": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    moment_dtype = jnp.bfloat16 if str(cfg.optimizer_moment_dtype) in ("bfloat16", "bf16") else jnp.float32
+    opt = adamw(moment_dtype=moment_dtype)
+    sched = warmup_cosine(3e-4, 2000, 100_000)
+
+    with sharding_context(mesh):
+        params = S.params_spec_tree(cfg, mesh)
+        meta = {"mesh_shape": dict(mesh.shape), "params": int(cfg.param_count())}
+
+        if shape.kind == "train":
+            micro = num_microbatches_for(cfg, shape, mesh)
+            meta["num_microbatches"] = micro
+            step = make_train_step(cfg, opt, sched, num_microbatches=micro)
+            state = TrainState(
+                step=S.scalar_spec(mesh),
+                params=params,
+                opt_state=S.opt_state_spec_tree(opt.init, params, mesh),
+                rng=S.rng_spec(mesh),
+            )
+            batch = S.batch_specs(cfg, shape, mesh)
+
+            def fn(state, batch):
+                with sharding_context(mesh):
+                    return step(state, batch)
+
+            return fn, (state, batch), meta
+
+        if shape.kind == "prefill":
+            caches = S.cache_specs(cfg, shape.global_batch, shape.seq_len, mesh)
+            toks = S.batch_specs(cfg, shape, mesh)
+            toks.pop("labels")
+            step = make_prefill_step(cfg)
+
+            def fn(params, caches, inputs):
+                with sharding_context(mesh):
+                    return step(params, caches, **inputs)
+
+            return fn, (params, caches, toks), meta
+
+        # decode: one new token against a seq_len cache
+        caches = S.cache_specs(cfg, shape.global_batch, shape.seq_len, mesh)
+        toks = S.decode_token_specs(cfg, shape.global_batch, mesh)
+        step = make_decode_step(cfg)
+
+        def fn(params, caches, cache_len, inputs):
+            with sharding_context(mesh):
+                return step(params, caches, cache_len, **inputs)
+
+        return fn, (params, caches, S.scalar_spec(mesh), toks), meta
+
+
+def model_flops(cfg, shape: S.ShapeSpec) -> float:
+    """6*N_active*tokens (train) / 2*N_active*tokens (inference)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token per row
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, keep_hlo: bool = False) -> Dict:
+    rec: Dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "n_devices": 512 if multi_pod else 256,
+    }
+    try:
+        fn, args, meta = build_cell(arch, shape_name, multi_pod)
+        if fn is None:
+            rec.update(status="skipped", reason=meta["skip"])
+            return rec
+        rec.update(meta)
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+        }
+        cost = compiled.cost_analysis()
+        rec["cost_flops_body_once"] = float(cost.get("flops", 0.0))
+        rec["cost_bytes_body_once"] = float(cost.get("bytes accessed", 0.0))
+
+        hlo = compiled.as_text()
+        from repro.launch import hlo_cost
+
+        analysis = hlo_cost.analyze_hlo(hlo)
+        rec["flops"] = analysis.flops  # per-device, while-trip-exact
+        rec["hbm_bytes"] = analysis.hbm_bytes
+        rec["collectives"] = {k: float(v) for k, v in analysis.collective_bytes.items()}
+        rec["collectives"]["total"] = float(analysis.total_collective_bytes)
+        rec["trip_counts"] = analysis.trip_counts
+        rec["roofline"] = hlo_cost.roofline_terms(analysis)
+        rec["hlo_lines"] = hlo.count("\n")
+        cfg = get_config(arch)
+        n_dev = rec["n_devices"]
+        rec["model_flops_total"] = model_flops(cfg, S.SHAPES[shape_name])
+        rec["model_flops_per_device"] = rec["model_flops_total"] / n_dev
+        rec["useful_flops_ratio"] = (
+            rec["model_flops_per_device"] / analysis.flops if analysis.flops else 0.0
+        )
+        rec["status"] = "ok"
+        if keep_hlo:
+            rec["hlo"] = hlo
+    except Exception as e:  # recorded, not raised — the sweep continues
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(S.SHAPES) + [None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="directory for per-cell JSON records")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(S.SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                mesh_name = "multi" if multi else "single"
+                out_path = (
+                    os.path.join(args.out, f"{arch}__{shape}__{mesh_name}.json")
+                    if args.out
+                    else None
+                )
+                if out_path and os.path.exists(out_path):
+                    print(f"[cached] {arch} {shape} {mesh_name}")
+                    continue
+                rec = run_cell(arch, shape, multi)
+                line = {k: rec.get(k) for k in ("arch", "shape", "mesh", "status", "lower_s", "compile_s", "flops", "error")}
+                print(json.dumps(line), flush=True)
+                if rec.get("status") == "ok":
+                    print("  memory:", rec["memory"])
+                    print("  collectives:", {k: f"{v:.3g}" for k, v in rec["collectives"].items()})
+                    print("  roofline:", {k: (f"{v:.3g}" if isinstance(v, float) else v) for k, v in rec["roofline"].items()})
+                if out_path:
+                    with open(out_path, "w") as f:
+                        json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

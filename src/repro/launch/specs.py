@@ -1,0 +1,262 @@
+"""ShapeDtypeStruct input specs + parameter/optimizer sharding rules for
+every (architecture x input shape) dry-run cell.
+
+Nothing here allocates device memory: params, optimizer state, caches and
+batches are all ``jax.ShapeDtypeStruct`` stand-ins carrying NamedShardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ArchConfig
+from repro.models.transformer import init_caches, init_params
+
+# ---------------------------------------------------------------------------
+# Assigned input shapes (assignment block)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# archs whose decode cost is sub-quadratic in context => run long_500k
+LONG_CONTEXT_ARCHS = ("rwkv6-3b", "jamba-v0.1-52b")
+
+
+def cell_applicable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.name not in LONG_CONTEXT_ARCHS:
+        return False, (
+            "skipped: full/global attention is quadratic in a 524k cache; "
+            "run for SSM/hybrid archs only (DESIGN.md §5)"
+        )
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (path-name based)
+# ---------------------------------------------------------------------------
+
+# stacked block leaves: name -> spec for (rep, *dims); non-stacked handled
+# separately.  "data" = FSDP axis, "model" = TP/EP axis.
+_BLOCK_RULES: Dict[str, Tuple] = {
+    "wq": (None, "data", "model"),
+    "wk": (None, "data", "model"),
+    "wv": (None, "data", "model"),
+    "wo": (None, "model", "data"),
+    "bq": (None, "model"),
+    "bk": (None, "model"),
+    "bv": (None, "model"),
+    "w_gate": (None, "data", "model"),
+    "router": (None, "data", None),
+    "in_proj": (None, "data", "model"),
+    "conv_w": (None, None, "model"),
+    "conv_b": (None, "model"),
+    "x_proj": (None, "model", None),
+    "dt_proj": (None, None, "model"),
+    "dt_bias": (None, "model"),
+    "a_log": (None, "model", None),
+    "d_skip": (None, "model"),
+    "out_proj": (None, "model", "data"),
+    "w_r": (None, "data", "model"),
+    "w_k": (None, "data", "model"),
+    "w_v": (None, "data", "model"),
+    "w_g": (None, "data", "model"),
+    "w_o": (None, "model", "data"),
+    "cmix_wk": (None, "data", "model"),
+    "cmix_wv": (None, "model", "data"),
+    "cmix_wr": (None, "data", "model"),
+    "lora_a": (None, "data", None),
+    "lora_b": (None, None, None, "data"),
+    "decay_lora_a": (None, "data", None),
+    "decay_lora_b": (None, None, "data"),
+}
+
+# rank-dependent (dense MLP (rep,d,ff) vs MoE experts (rep,E,d,ff))
+_W_IN_LIKE = {"w_in"}
+_W_OUT_LIKE = {"w_out"}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def param_spec(path, leaf) -> P:
+    name = _leaf_name(path)
+    ndim = len(leaf.shape)
+    if name == "embed":
+        if ndim == 3:  # (n_q, V, d) audio
+            return P(None, "model", "data")
+        return P("model", "data")
+    if name in ("lm_head", "heads"):
+        return P("data", "model")
+    if name in _W_IN_LIKE:
+        return P(None, "model", "data", None) if ndim == 4 else P(None, "data", "model")
+    if name in _W_OUT_LIKE:
+        return P(None, "model", None, "data") if ndim == 4 else P(None, "model", "data")
+    if name == "w_gate" and ndim == 4:
+        return P(None, "model", "data", None)
+    rule = _BLOCK_RULES.get(name)
+    if rule is not None and len(rule) == ndim:
+        return P(*rule)
+    return P()  # norms, scalars, small adapters: replicated
+
+
+def _divisible(shape, spec: P, mesh: Mesh) -> bool:
+    import numpy as np
+
+    parts = tuple(spec) + (None,) * (len(shape) - len(spec))
+    for dim, part in zip(shape, parts):
+        if part is None:
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if dim % n != 0:
+            return False
+    return True
+
+
+def param_sharding(path, leaf, mesh: Mesh) -> NamedSharding:
+    spec = param_spec(path, leaf)
+    if not _divisible(leaf.shape, spec, mesh):
+        spec = P()
+    return NamedSharding(mesh, spec)
+
+
+def params_spec_tree(cfg: ArchConfig, mesh: Mesh):
+    """ShapeDtypeStructs (with shardings) for params — via eval_shape."""
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    return jax.tree_util.tree_map_with_path(
+        lambda p, s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=param_sharding(p, s, mesh)),
+        shapes,
+    )
+
+
+def opt_state_spec_tree(opt_init, params_specs, mesh: Mesh):
+    """Optimizer-state ShapeDtypeStructs; moments inherit the param spec
+    (the path tail inside m/v mirrors the param path)."""
+    shapes = jax.eval_shape(opt_init, params_specs)
+
+    def place(path, s):
+        return jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=param_sharding(path, s, mesh)
+        )
+
+    return jax.tree_util.tree_map_with_path(place, shapes)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache input specs
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _batch_spec(mesh: Mesh, batch: int, extra: Tuple = ()) -> NamedSharding:
+    axes = _batch_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    first = axes if (batch % n == 0 and batch >= n) else None
+    return NamedSharding(mesh, P(first, *extra))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> Dict[str, Any]:
+    """Train-batch ShapeDtypeStructs for this arch."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.frontend == "vision_stub":
+        return {
+            "embeds": sds((b, s, cfg.d_model), jnp.bfloat16, sharding=_batch_spec(mesh, b, (None, None))),
+            "positions": sds((3, b, s), jnp.int32, sharding=NamedSharding(mesh, P(None, _batch_axes(mesh) or None, None))),
+            "labels": sds((b, s), jnp.int32, sharding=_batch_spec(mesh, b, (None,))),
+        }
+    if cfg.frontend == "audio_codes":
+        return {
+            "tokens": sds((b, s, cfg.n_codebooks), jnp.int32, sharding=_batch_spec(mesh, b, (None, None))),
+            "labels": sds((b, s, cfg.n_codebooks), jnp.int32, sharding=_batch_spec(mesh, b, (None, None))),
+        }
+    return {
+        "tokens": sds((b, s), jnp.int32, sharding=_batch_spec(mesh, b, (None,))),
+        "labels": sds((b, s), jnp.int32, sharding=_batch_spec(mesh, b, (None,))),
+    }
+
+
+def decode_token_specs(cfg: ArchConfig, batch: int, mesh: Mesh) -> Dict[str, Any]:
+    sds = jax.ShapeDtypeStruct
+    if cfg.frontend == "vision_stub":
+        return {
+            "embeds": sds((batch, 1, cfg.d_model), jnp.bfloat16, sharding=_batch_spec(mesh, batch, (None, None))),
+            "positions": sds((3, batch, 1), jnp.int32, sharding=NamedSharding(mesh, P(None, _batch_axes(mesh) or None, None))),
+        }
+    if cfg.frontend == "audio_codes":
+        return {"tokens": sds((batch, 1, cfg.n_codebooks), jnp.int32, sharding=_batch_spec(mesh, batch, (None, None)))}
+    return {"tokens": sds((batch, 1), jnp.int32, sharding=_batch_spec(mesh, batch, (None,)))}
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int, mesh: Mesh):
+    """Decode-state ShapeDtypeStructs; attention KV seq-sharded over model."""
+    from repro.models.transformer import cache_shardings_logical
+    from repro.parallel.sharding import logical_to_spec, sharding_context
+
+    shapes = jax.eval_shape(lambda: init_caches(cfg, batch, max_len))
+    with sharding_context(mesh):
+        logical = cache_shardings_logical(cfg)
+
+        def place(path, s):
+            # find logical axes by path: pos name then leaf name
+            pos = None
+            name = None
+            for entry in path:
+                if isinstance(entry, jax.tree_util.DictKey):
+                    if str(entry.key).startswith("pos"):
+                        pos = str(entry.key)
+                    else:
+                        name = str(entry.key)
+            axes = list(logical.get(pos, {}).get(name, (None,) * len(s.shape)))
+            # batch axis: only shard when divisible
+            bax = _batch_axes(mesh)
+            n = 1
+            for a in bax:
+                n *= mesh.shape[a]
+            if "batch" in axes and (batch % n != 0 or batch < n):
+                axes[axes.index("batch")] = None
+            spec = logical_to_spec(axes)
+            if not _divisible(s.shape, spec, mesh):
+                spec = P()
+            return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, spec))
+
+        return jax.tree_util.tree_map_with_path(place, shapes)
+
+
+def scalar_spec(mesh: Mesh, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct((), dtype, sharding=NamedSharding(mesh, P()))
+
+
+def rng_spec(mesh: Mesh):
+    return jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=NamedSharding(mesh, P()))

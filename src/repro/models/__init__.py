@@ -1,0 +1,2 @@
+from repro.models.common import ArchConfig, BlockSpec
+from repro.models.transformer import init_params, forward, init_caches, ModelOutput

@@ -1,0 +1,311 @@
+"""GQA attention: RoPE / M-RoPE, local+global, softcap, chunked-causal
+(flash-style) prefill, seq-sharded KV-cache decode.
+
+Implementation notes
+  * Chunked prefill uses a *flattened (i, j <= i) pair scan*: the static list
+    of causal chunk pairs is scanned with online-softmax accumulation, so the
+    compiled graph does exactly the causal half of the score FLOPs (a naive
+    masked two-level scan would double them — this shows up directly in the
+    MODEL_FLOPS / HLO_FLOPs roofline ratio).
+  * Decode attends a (B, max_len, KV, hd) cache sharded over the ``model``
+    mesh axis on the *sequence* dim (flash-decoding style); XLA inserts the
+    logsumexp-combining collectives for the sharded softmax reduction.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ArchConfig, BlockSpec, dense_init, softcap
+from repro.parallel.sharding import shard
+
+Array = jax.Array
+
+NEG_INF = -1e30
+CHUNK_THRESHOLD = 8192  # use chunked prefill beyond this many tokens
+CHUNK_SIZE = 2048
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _rope_freqs(hd: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions: Array, theta: float, sections: Tuple[int, ...]) -> Array:
+    """Qwen2-VL multimodal RoPE. positions: (3, B, S) — temporal / h / w
+    streams; ``sections`` partitions the hd/2 frequency dims among streams."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = _rope_freqs(hd, theta)  # (hd/2,)
+    ang_streams = positions[..., None].astype(jnp.float32) * freqs  # (3, B, S, hd/2)
+    sel = np.concatenate([np.full((s,), i) for i, s in enumerate(sections)])
+    sel = jnp.asarray(sel, jnp.int32)  # (hd/2,)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_streams, 0, -1), sel[None, None, :, None], axis=-1
+    )[..., 0]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key: Array, cfg: ArchConfig) -> Dict[str, Array]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(ks[0], d, h * hd, cfg.param_dtype),
+        "wk": dense_init(ks[1], d, kv * hd, cfg.param_dtype),
+        "wv": dense_init(ks[2], d, kv * hd, cfg.param_dtype),
+        "wo": dense_init(ks[3], h * hd, d, cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((h * hd,), cfg.param_dtype)
+        params["bk"] = jnp.zeros((kv * hd,), cfg.param_dtype)
+        params["bv"] = jnp.zeros((kv * hd,), cfg.param_dtype)
+    return params
+
+
+def _project_qkv(params, x: Array, cfg: ArchConfig, positions: Array):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cd = cfg.compute_dtype
+    q = x @ params["wq"].astype(cd)
+    k = x @ params["wk"].astype(cd)
+    v = x @ params["wv"].astype(cd)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(cd)
+        k = k + params["bk"].astype(cd)
+        v = v + params["bv"].astype(cd)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        pos2d = positions if positions.ndim == 2 else positions[0]
+        q = apply_rope(q, pos2d, cfg.rope_theta)
+        k = apply_rope(k, pos2d, cfg.rope_theta)
+    if getattr(cfg, "seq_shard_attention", False):
+        from repro.parallel.sharding import current_mesh, current_rules
+
+        mesh = current_mesh()
+        n_model = 1
+        if mesh is not None:
+            for ax in current_rules().get("heads") or ():
+                if ax in mesh.axis_names:
+                    n_model *= mesh.shape[ax]
+        if h % max(n_model, 1) != 0:
+            # heads unshardable: shard query-sequence over `model`; k/v stay
+            # replicated so scores/softmax/out are fully shard-local.
+            q = shard(q, ("batch", "kv_seq", None, None))
+            return q, k, v
+    q = shard(q, ("batch", None, "heads", None))
+    return q, k, v
+
+
+def _repeat_kv(x: Array, n_rep: int) -> Array:
+    if n_rep == 1:
+        return x
+    b, s, kv, hd = x.shape
+    return jnp.repeat(x, n_rep, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Full (materialized-scores) attention — short sequences
+# ---------------------------------------------------------------------------
+
+
+def _full_attention(q, k, v, cfg: ArchConfig, spec: BlockSpec) -> Array:
+    b, s, h, hd = q.shape
+    scale = cfg.attn_scale or (1.0 / math.sqrt(hd))
+    k = _repeat_kv(k, h // k.shape[2])
+    v = _repeat_kv(v, h // v.shape[2])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = ki <= qi
+    if spec.attn_type == "local":
+        mask &= ki > qi - cfg.window_size
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# Chunked-causal (flash-style) attention — long prefill
+# ---------------------------------------------------------------------------
+
+
+def _chunked_attention(q, k, v, cfg: ArchConfig, spec: BlockSpec, chunk: int) -> Array:
+    """Online-softmax over the static list of causal chunk pairs (i, j<=i)."""
+    b, s, h, hd = q.shape
+    scale = cfg.attn_scale or (1.0 / math.sqrt(hd))
+    k = _repeat_kv(k, h // k.shape[2])
+    v = _repeat_kv(v, h // v.shape[2])
+    nc = s // chunk
+    assert s % chunk == 0, (s, chunk)
+
+    pairs = np.array([(i, j) for i in range(nc) for j in range(i + 1)], np.int32)
+    if spec.attn_type == "local":
+        span = -(-cfg.window_size // chunk)  # chunks that can be in-window
+        pairs = pairs[pairs[:, 0] - pairs[:, 1] <= span]
+
+    qc = q.reshape(b, nc, chunk, h, hd)
+    kc = k.reshape(b, nc, chunk, h, hd)
+    vc = v.reshape(b, nc, chunk, h, hd)
+
+    acc0 = jnp.zeros((b, nc, chunk, h, hd), jnp.float32)
+    m0 = jnp.full((b, nc, chunk, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, nc, chunk, h), jnp.float32)
+
+    qi_local = jnp.arange(chunk)[:, None]
+    ki_local = jnp.arange(chunk)[None, :]
+
+    def body(carry, pair):
+        acc, m, l = carry
+        i, j = pair[0], pair[1]
+        qb = jax.lax.dynamic_index_in_dim(qc, i, axis=1, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(kc, j, axis=1, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vc, j, axis=1, keepdims=False)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", qb, kb).astype(jnp.float32) * scale
+        sc = softcap(sc, cfg.attn_softcap)
+        gq = i * chunk + qi_local
+        gk = j * chunk + ki_local
+        mask = gk <= gq
+        if spec.attn_type == "local":
+            mask &= gk > gq - cfg.window_size
+        sc = jnp.where(mask[None, None], sc, NEG_INF)
+
+        mi = jax.lax.dynamic_index_in_dim(m, i, axis=1, keepdims=False)  # (b, chunk, h)
+        li = jax.lax.dynamic_index_in_dim(l, i, axis=1, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(acc, i, axis=1, keepdims=False)
+
+        sc_max = jnp.max(sc, axis=-1)  # (b, h, q)
+        m_new = jnp.maximum(mi, jnp.transpose(sc_max, (0, 2, 1)))
+        corr = jnp.exp(mi - m_new)  # (b, q, h)
+        p = jnp.exp(sc - jnp.transpose(m_new, (0, 2, 1))[:, :, :, None])  # (b,h,q,k)
+        l_new = li * corr + jnp.transpose(jnp.sum(p, axis=-1), (0, 2, 1))
+        a_new = ai * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bqhd", p.astype(qb.dtype), vb
+        ).astype(jnp.float32)
+
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, axis=1)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, axis=1)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, axis=1)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.asarray(pairs))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Array]:
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), cfg.compute_dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), cfg.compute_dtype),
+    }
+
+
+def _decode_attention(q, cache_k, cache_v, cache_len, cfg: ArchConfig, spec: BlockSpec):
+    """q: (B, 1, H, hd); cache_(k|v): (B, L, KV, hd); cache_len: scalar."""
+    b, _, h, hd = q.shape
+    scale = cfg.attn_scale or (1.0 / math.sqrt(hd))
+    k = _repeat_kv(cache_k, h // cache_k.shape[2])
+    v = _repeat_kv(cache_v, h // cache_v.shape[2])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    ki = jnp.arange(k.shape[1])[None, None, None, :]
+    mask = ki < cache_len
+    if spec.attn_type == "local":
+        mask &= ki >= cache_len - cfg.window_size
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# Public entry
+# ---------------------------------------------------------------------------
+
+
+def attn_apply(
+    params: Dict[str, Array],
+    x: Array,
+    cfg: ArchConfig,
+    spec: BlockSpec,
+    positions: Array,
+    cache: Optional[Dict[str, Array]] = None,
+    cache_len: Optional[Array] = None,
+) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    """Returns (output (B, S, d), updated cache or None).
+
+    * cache is None: training/scoring forward over the full sequence.
+    * cache given, S == 1: single-token decode (writes position cache_len).
+    * cache given, S > 1: prefill — fills cache[0:S] and returns it.
+    """
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    q, k, v = _project_qkv(params, x, cfg, positions)
+
+    new_cache = None
+    if cache is not None:
+        if s == 1:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_len, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_len, axis=1)
+            ck = shard(ck, ("batch", "kv_seq", None, None))
+            cv = shard(cv, ("batch", "kv_seq", None, None))
+            new_cache = {"k": ck, "v": cv}
+            out = _decode_attention(q, ck, cv, cache_len + 1, cfg, spec)
+            out = out.reshape(b, s, h * hd)
+            return out @ params["wo"].astype(cfg.compute_dtype), new_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+        new_cache = {
+            "k": shard(ck, ("batch", "kv_seq", None, None)),
+            "v": shard(cv, ("batch", "kv_seq", None, None)),
+        }
+
+    threshold = getattr(cfg, "attn_chunk_threshold", CHUNK_THRESHOLD)
+    chunk = getattr(cfg, "attn_chunk_size", CHUNK_SIZE)
+    if s > threshold and s % chunk == 0:
+        out = _chunked_attention(q, k, v, cfg, spec, chunk)
+    else:
+        out = _full_attention(q, k, v, cfg, spec)
+    out = out.reshape(b, s, h * hd)
+    out = out @ params["wo"].astype(cfg.compute_dtype)
+    return out, new_cache

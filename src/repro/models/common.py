@@ -1,0 +1,261 @@
+"""Architecture configs and shared layer primitives (functional, no flax).
+
+Every model is a decoder stack described by a repeating *pattern* of
+``BlockSpec`` entries (mixer kind + FFN kind).  Parameters for each pattern
+position are stacked across repetitions so the whole stack runs as one
+``lax.scan`` (small HLO, fast 512-way SPMD compiles) with remat.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decorrelation import LMDecorrConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """One layer position in the repeating pattern."""
+
+    mixer: str = "attn"  # attn | mamba | rwkv
+    attn_type: str = "global"  # global | local (sliding window)
+    ffn: str = "dense"  # dense | moe | none (rwkv has its own channel mix)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    pattern: Tuple[BlockSpec, ...] = (BlockSpec(),)
+
+    # attention options
+    rope_theta: float = 10000.0
+    mrope: bool = False  # qwen2-vl multimodal RoPE (3 position streams)
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)  # halves of head_dim
+    qkv_bias: bool = False
+    attn_softcap: Optional[float] = None  # gemma2: 50.0
+    final_softcap: Optional[float] = None  # gemma2: 30.0
+    window_size: int = 4096  # for local layers
+    attn_scale: Optional[float] = None
+
+    # mlp
+    activation: str = "swiglu"  # swiglu | gelu | squared_relu
+    mlp_bias: bool = False
+
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: Optional[int] = None
+    dense_residual: bool = False  # arctic: dense MLP in parallel with MoE
+    shared_expert: bool = False  # llama4: always-on shared expert
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    moe_group_size: Optional[int] = None  # chunk dispatch: O(T*G) not O(T^2)
+
+    # ssm (mamba)
+    ssm_d_state: int = 16
+    ssm_d_conv: int = 4
+    ssm_expand: int = 2
+    # rwkv6
+    rwkv_head_dim: int = 64
+    rwkv_chunk: Optional[int] = None  # chunk-parallel recurrence (perf)
+    ssm_unroll: int = 1  # mamba scan unroll: keeps state in-register u steps
+
+    # attention execution (perf knobs; defaults reproduce the naive baseline)
+    attn_chunk_threshold: int = 8192  # use chunked flash path beyond this S
+    attn_chunk_size: int = 2048
+    # when n_heads % model-parallelism != 0, shard attention activations on
+    # the QUERY-SEQUENCE dim over `model` (Megatron-SP style) instead of
+    # replicating head compute (kills score-sized bwd all-reduces)
+    seq_shard_attention: bool = False
+
+    # norms / embeddings
+    rms_eps: float = 1e-6
+    post_block_norm: bool = False  # gemma2 sandwich norm
+    scale_embed: bool = False  # gemma2: * sqrt(d_model)
+    tie_embeddings: bool = True
+
+    # modality frontends (stubs per assignment: precomputed embeddings)
+    frontend: str = "none"  # none | vision_stub | audio_codes
+    n_codebooks: int = 4  # musicgen
+
+    # dtypes
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    optimizer_moment_dtype: Any = jnp.float32
+
+    # training features
+    decorr: LMDecorrConfig = dataclasses.field(default_factory=LMDecorrConfig)
+    remat: bool = True
+    remat_policy: str = "nothing"  # nothing | dots (save matmul outputs)
+
+    # citation / provenance
+    source: str = ""
+
+    def __post_init__(self):
+        assert self.n_layers % len(self.pattern) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not a multiple of "
+            f"pattern length {len(self.pattern)}"
+        )
+
+    @property
+    def repeats(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // max(self.n_heads, 1)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(b.mixer != "attn" for b in self.pattern)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode cost is sub-quadratic in context (SSM / hybrid)."""
+        return all(b.mixer != "attn" or b.attn_type == "local" for b in self.pattern) or (
+            self.family in ("ssm", "hybrid")
+        )
+
+    def param_count(self) -> int:
+        """Approximate total parameter count (embeddings + blocks)."""
+        d, ff = self.d_model, self.d_ff
+        hd, h, kv = self.hd, self.n_heads, self.n_kv_heads
+        total = self.vocab_size * d  # embedding
+        if not self.tie_embeddings:
+            total += self.vocab_size * d
+        for spec in self.pattern:
+            blk = 0
+            if spec.mixer == "attn":
+                blk += d * (h * hd) + 2 * d * (kv * hd) + (h * hd) * d
+            elif spec.mixer == "mamba":
+                di = self.ssm_expand * d
+                blk += d * 2 * di + di * (2 * self.ssm_d_state + di // 8) + di * d
+            elif spec.mixer == "rwkv":
+                blk += 4 * d * d + 2 * d * d  # time-mix + projections (approx)
+            if spec.ffn == "dense":
+                mults = 3 if self.activation in ("swiglu", "geglu") else 2
+                blk += mults * d * ff
+            elif spec.ffn == "moe":
+                mdff = self.moe_d_ff or ff
+                mults = 3 if self.activation in ("swiglu", "geglu") else 2
+                blk += self.n_experts * mults * d * mdff + d * self.n_experts
+                if self.dense_residual:
+                    blk += mults * d * ff
+                if self.shared_expert:
+                    blk += mults * d * mdff
+            blk += 2 * d  # norms
+            total += blk * self.repeats
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        d = self.d_model
+        mdff = self.moe_d_ff or self.d_ff
+        mults = 3 if self.activation in ("swiglu", "geglu") else 2
+        per_expert = mults * d * mdff
+        inactive = 0
+        for spec in self.pattern:
+            if spec.ffn == "moe":
+                inactive += (self.n_experts - self.top_k) * per_expert * self.repeats
+        return self.param_count() - inactive
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """Small same-family config for CPU smoke tests."""
+        pat_len = len(self.pattern)
+        small = dict(
+            n_layers=2 * pat_len,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2),
+            head_dim=16,
+            d_ff=128,
+            vocab_size=256,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            moe_d_ff=64 if self.n_experts else None,
+            window_size=16,
+            ssm_d_state=8,
+            rwkv_head_dim=16,
+            param_dtype=jnp.float32,
+            compute_dtype=jnp.float32,
+            mrope_sections=(4, 2, 2),
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+# ---------------------------------------------------------------------------
+# Shared primitives
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def init_rms_norm(d: int, dtype) -> Array:
+    return jnp.zeros((d,), dtype)  # stored as (weight - 1); see rms_norm
+
+
+def dense_init(key: Array, d_in: int, d_out: int, dtype, scale: Optional[float] = None) -> Array:
+    s = scale if scale is not None else 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def softcap(x: Array, cap: Optional[float]) -> Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def activation_fn(name: str):
+    if name == "squared_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "gelu":
+        return jax.nn.gelu
+    return jax.nn.silu  # swiglu gate
+
+
+def mlp_init(key: Array, cfg: ArchConfig, d_ff: Optional[int] = None) -> Dict[str, Array]:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    keys = jax.random.split(key, 3)
+    gated = cfg.activation in ("swiglu", "geglu")
+    params = {
+        "w_in": dense_init(keys[0], d, ff, cfg.param_dtype),
+        "w_out": dense_init(keys[1], ff, d, cfg.param_dtype),
+    }
+    if gated:
+        params["w_gate"] = dense_init(keys[2], d, ff, cfg.param_dtype)
+    return params
+
+
+def mlp_apply(params: Dict[str, Array], x: Array, cfg: ArchConfig) -> Array:
+    act = activation_fn(cfg.activation)
+    h = x @ params["w_in"].astype(cfg.compute_dtype)
+    if "w_gate" in params:
+        g = x @ params["w_gate"].astype(cfg.compute_dtype)
+        h = act(g) * h
+    else:
+        h = act(h)
+    return h @ params["w_out"].astype(cfg.compute_dtype)

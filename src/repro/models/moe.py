@@ -1,0 +1,174 @@
+"""Mixture-of-Experts FFN: GShard-style capacity dispatch.
+
+Dense one-hot dispatch/combine einsums (static shapes, MXU-friendly,
+FLOPs proportional to top_k rather than n_experts) with per-expert capacity
+``C = ceil(T / E * top_k * capacity_factor)``; overflow tokens are dropped
+(their residual passes through).  Experts are sharded over the ``model``
+mesh axis (expert parallelism); the dispatch einsum induces the all-to-all.
+
+Variants for the assigned archs:
+  * arctic-480b:   128 experts top-2 + a *dense residual* MLP in parallel
+  * llama4-scout:  16 experts top-1 + an always-on *shared expert*
+  * jamba:         16 experts top-2, MoE on every other layer
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, activation_fn, dense_init, mlp_apply, mlp_init
+from repro.parallel.sharding import shard
+
+Array = jax.Array
+
+
+def moe_init(key: Array, cfg: ArchConfig) -> Dict[str, Array]:
+    d = cfg.d_model
+    e = cfg.n_experts
+    ff = cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 6)
+    gated = cfg.activation in ("swiglu", "geglu")
+    params = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_in": dense_init(ks[1], d, ff, cfg.param_dtype) * jnp.ones((e, 1, 1), cfg.param_dtype),
+        "w_out": dense_init(ks[2], ff, d, cfg.param_dtype) * jnp.ones((e, 1, 1), cfg.param_dtype),
+    }
+    # break expert symmetry
+    params["w_in"] = params["w_in"] + 0.02 * jax.random.normal(ks[3], params["w_in"].shape, jnp.float32).astype(cfg.param_dtype) / jnp.sqrt(d).astype(cfg.param_dtype)
+    if gated:
+        params["w_gate"] = dense_init(ks[4], d, ff, cfg.param_dtype) * jnp.ones((e, 1, 1), cfg.param_dtype)
+    if cfg.dense_residual:
+        params["dense"] = mlp_init(ks[5], cfg)
+    if cfg.shared_expert:
+        params["shared"] = mlp_init(ks[5], cfg, d_ff=ff)
+    return params
+
+
+def _capacity(tokens: int, cfg: ArchConfig) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(4, -(-c // 4) * 4)
+
+
+def moe_apply(params: Dict[str, Array], x: Array, cfg: ArchConfig) -> Tuple[Array, Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    With ``cfg.moe_group_size = G`` the dense one-hot dispatch runs per
+    G-token group (vmapped): the dispatch/combine einsums cost O(T*G*k*cf*d)
+    instead of O(T^2*k*cf*d/E) — the difference between quadratic and linear
+    in sequence length at prefill shapes (EXPERIMENTS.md §Perf).
+    """
+    b, s, d = x.shape
+    t = b * s
+    g = cfg.moe_group_size
+    if g and t > g and t % g == 0:
+        out, aux = _moe_grouped(params, x.reshape(t // g, g, d), cfg)
+        out = out.reshape(b, s, d)
+    else:
+        out, aux = _moe_one_group(params, x.reshape(t, d), cfg)
+        out = out.reshape(b, s, d)
+
+    if cfg.dense_residual and "dense" in params:
+        out = out + mlp_apply(params["dense"], x, cfg)
+    if cfg.shared_expert and "shared" in params:
+        out = out + mlp_apply(params["shared"], x, cfg)
+    return out.astype(x.dtype), aux
+
+
+def _moe_grouped(params: Dict[str, Array], xg: Array, cfg: ArchConfig) -> Tuple[Array, Array]:
+    """xg: (n_groups, G, d) -> ((n_groups, G, d), aux).
+
+    Explicit group axis (no vmap) so the expert-parallel sharding
+    constraints keep their intended axes; group results share one merged
+    per-expert capacity buffer (E, n_groups*C, d) so the expert matmuls
+    stay a single large MXU contraction."""
+    n, g, d = xg.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(g, cfg)
+    cd = cfg.compute_dtype
+
+    logits = xg.astype(jnp.float32) @ params["router"]  # (n, G, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (n, G, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    mask = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)  # (n, G, k, E)
+    mask_flat = mask.transpose(0, 2, 1, 3).reshape(n, k * g, e)
+    pos_flat = jnp.cumsum(mask_flat, axis=1) - mask_flat  # per-group count
+    pos = pos_flat.reshape(n, k, g, e).transpose(0, 2, 1, 3)  # (n, G, k, E)
+    pos = jnp.sum(pos * mask, axis=-1)  # (n, G, k)
+    keep = (pos < cap) & (jnp.sum(mask, axis=-1) > 0)
+    disp_k = jax.nn.one_hot(pos, cap, dtype=xg.dtype) * keep[..., None].astype(xg.dtype)
+    dispatch = jnp.einsum("ntke,ntkc->ntec", mask.astype(xg.dtype), disp_k)
+    combine = jnp.einsum(
+        "ntk,ntke,ntkc->ntec", gate_vals.astype(xg.dtype), mask.astype(xg.dtype), disp_k
+    )
+
+    xe = jnp.einsum("ntec,ntd->necd", dispatch, xg)  # (n, E, C, d)
+    xe = xe.transpose(1, 0, 2, 3).reshape(e, n * cap, d)  # (E, n*C, d)
+    xe = shard(xe, ("experts", None, None))
+    act = activation_fn(cfg.activation)
+    h = jnp.einsum("ecd,edf->ecf", xe, params["w_in"].astype(cd))
+    if "w_gate" in params:
+        gte = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(cd))
+        h = act(gte) * h
+    else:
+        h = act(h)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_out"].astype(cd))
+    ye = shard(ye, ("experts", None, None))
+    ye = ye.reshape(e, n, cap, d).transpose(1, 0, 2, 3)  # (n, E, C, d)
+    out = jnp.einsum("ntec,necd->ntd", combine, ye)
+
+    frac_tokens = jnp.mean(mask[:, :, 0].astype(jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return out, aux
+
+
+def _moe_one_group(params: Dict[str, Array], xf: Array, cfg: ArchConfig) -> Tuple[Array, Array]:
+    """xf: (T, d) -> ((T, d), aux)."""
+    t, d = xf.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(t, cfg)
+
+    logits = (xf.astype(jnp.float32)) @ params["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # position-in-expert via cumulative count over (k-major, token) order
+    mask = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)  # (T, k, E)
+    mask_flat = mask.transpose(1, 0, 2).reshape(k * t, e)
+    pos_flat = jnp.cumsum(mask_flat, axis=0) - mask_flat  # count before me
+    pos = pos_flat.reshape(k, t, e).transpose(1, 0, 2)  # (T, k, E)
+    pos = jnp.sum(pos * mask, axis=-1)  # (T, k)
+    keep = (pos < cap) & (jnp.sum(mask, axis=-1) > 0)
+
+    disp_k = (
+        jax.nn.one_hot(pos, cap, dtype=xf.dtype)
+        * keep[..., None].astype(xf.dtype)
+    )  # (T, k, C)
+    dispatch = jnp.einsum("tke,tkc->tec", mask.astype(xf.dtype), disp_k)  # (T, E, C)
+    combine = jnp.einsum("tk,tke,tkc->tec", gate_vals.astype(xf.dtype), mask.astype(xf.dtype), disp_k)
+
+    xe = jnp.einsum("tec,td->ecd", dispatch, xf)  # (E, C, d)
+    xe = shard(xe, ("experts", None, None))
+    cd = cfg.compute_dtype
+    h = jnp.einsum("ecd,edf->ecf", xe, params["w_in"].astype(cd))
+    act = activation_fn(cfg.activation)
+    if "w_gate" in params:
+        g = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(cd))
+        h = act(g) * h
+    else:
+        h = act(h)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_out"].astype(cd))
+    ye = shard(ye, ("experts", None, None))
+    out = jnp.einsum("tec,ecd->td", combine, ye)
+
+    # Switch-style load-balance auxiliary loss
+    frac_tokens = jnp.mean(mask[:, 0].astype(jnp.float32), axis=0)  # top-1 fraction
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return out, aux

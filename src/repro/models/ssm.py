@@ -1,0 +1,375 @@
+"""State-space mixers: Mamba (selective SSM, for Jamba) and RWKV-6 (Finch).
+
+Both are sequential recurrences implemented with ``lax.scan`` over time for
+train/prefill and an O(1) single-step update for decode — this is what makes
+the ``long_500k`` shape (524k-token context, one-token decode) feasible:
+the carried state is a few MB regardless of context length.
+
+Decode state:
+  mamba: {"conv": (B, d_conv-1, di), "ssm": (B, di, N)}
+  rwkv:  {"wkv": (B, H, hd, hd), "shift_t": (B, d), "shift_c": (B, d)}
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, dense_init
+from repro.parallel.sharding import shard
+
+Array = jax.Array
+
+DT_RANK_DIV = 16
+LORA_DIM = 32
+
+
+# ===========================================================================
+# Mamba (selective SSM)
+# ===========================================================================
+
+
+def mamba_init(key: Array, cfg: ArchConfig) -> Dict[str, Array]:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_d_state
+    dt_rank = max(1, d // DT_RANK_DIV)
+    ks = jax.random.split(key, 8)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_d_conv, di), jnp.float32) * 0.1).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((di,), cfg.param_dtype),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * n, cfg.param_dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, di, cfg.param_dtype),
+        "dt_bias": jnp.full((di,), -4.6, cfg.param_dtype),  # softplus ~ 0.01
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, cfg.param_dtype),
+    }
+
+
+def _mamba_conv_full(x: Array, w: Array, b: Array) -> Array:
+    """Causal depthwise conv over (B, S, di) with kernel (K, di)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def mamba_apply(
+    params: Dict[str, Array],
+    x: Array,
+    cfg: ArchConfig,
+    state: Optional[Dict[str, Array]] = None,
+) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    """x: (B, S, d). state given + S == 1 -> decode step; else full scan."""
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_d_state
+    dt_rank = max(1, d // DT_RANK_DIV)
+    cd = cfg.compute_dtype
+
+    xz = x @ params["in_proj"].astype(cd)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_w = params["conv_w"].astype(cd)
+    conv_b = params["conv_b"].astype(cd)
+    kk = conv_w.shape[0]
+
+    decode = state is not None and s == 1
+    if decode:
+        hist = jnp.concatenate([state["conv"].astype(cd), xin], axis=1)  # (B, K, di)
+        xc = jnp.sum(hist * conv_w[None], axis=1, keepdims=True) + conv_b
+        new_conv = hist[:, 1:, :]
+    else:
+        xc = _mamba_conv_full(xin, conv_w, conv_b)
+        new_conv = None
+        if state is not None:  # prefill: save tail for subsequent decode
+            pad = jnp.zeros((b, max(0, (kk - 1) - s), di), cd)
+            new_conv = jnp.concatenate([pad, xin[:, -(kk - 1) :, :]], axis=1)
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ params["x_proj"].astype(cd)
+    dt_raw, b_mat, c_mat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw @ params["dt_proj"].astype(cd) + params["dt_bias"].astype(cd)
+    ).astype(jnp.float32)  # (B, S, di)
+    a = -jnp.exp(params["a_log"])  # (di, n)
+    da = jnp.exp(dt[..., None] * a)  # (B, S, di, n)
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * b_mat.astype(jnp.float32)[:, :, None, :]
+
+    h0 = state["ssm"].astype(jnp.float32) if state is not None else jnp.zeros((b, di, n), jnp.float32)
+
+    if decode:
+        h = da[:, 0] * h0 + dbx[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0].astype(jnp.float32))[:, None, :]
+        new_ssm = h
+    else:
+        def step(h, inp):
+            da_t, dbx_t, c_t = inp
+            h = da_t * h + dbx_t
+            y = jnp.einsum("bdn,bn->bd", h, c_t)
+            return h, y
+
+        xs = (
+            jnp.moveaxis(da, 1, 0),
+            jnp.moveaxis(dbx, 1, 0),
+            jnp.moveaxis(c_mat.astype(jnp.float32), 1, 0),
+        )
+        unroll = max(1, getattr(cfg, "ssm_unroll", 1))
+        new_ssm, ys = jax.lax.scan(step, h0, xs, unroll=unroll)
+        y = jnp.moveaxis(ys, 0, 1)  # (B, S, di)
+
+    y = y + xc.astype(jnp.float32) * params["d_skip"]
+    y = (y.astype(cd)) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(cd)
+
+    new_state = None
+    if state is not None:
+        new_state = {"conv": (new_conv if new_conv is not None else state["conv"]).astype(cd), "ssm": new_ssm}
+    return out, new_state
+
+
+def mamba_init_state(cfg: ArchConfig, batch: int) -> Dict[str, Array]:
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_d_conv - 1, di), cfg.compute_dtype),
+        "ssm": jnp.zeros((batch, di, cfg.ssm_d_state), jnp.float32),
+    }
+
+
+# ===========================================================================
+# RWKV-6 (Finch): data-dependent decay linear recurrence
+# ===========================================================================
+
+
+def rwkv_init(key: Array, cfg: ArchConfig) -> Dict[str, Array]:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    ks = jax.random.split(key, 16)
+    p = {
+        # time-mix (attention analogue)
+        "mu_base": jnp.full((d,), 0.5, cfg.param_dtype),
+        "mu": 0.5 * jnp.ones((5, d), cfg.param_dtype),  # r,k,v,w,g
+        "lora_a": dense_init(ks[0], d, 5 * LORA_DIM, cfg.param_dtype),
+        "lora_b": (jax.random.normal(ks[1], (5, LORA_DIM, d), jnp.float32) * 0.01).astype(cfg.param_dtype),
+        "w_r": dense_init(ks[2], d, d, cfg.param_dtype),
+        "w_k": dense_init(ks[3], d, d, cfg.param_dtype),
+        "w_v": dense_init(ks[4], d, d, cfg.param_dtype),
+        "w_g": dense_init(ks[5], d, d, cfg.param_dtype),
+        "w_o": dense_init(ks[6], d, d, cfg.param_dtype),
+        "decay_base": jnp.full((d,), -5.0, jnp.float32),
+        "decay_lora_a": dense_init(ks[7], d, LORA_DIM, cfg.param_dtype),
+        "decay_lora_b": (jax.random.normal(ks[8], (LORA_DIM, d), jnp.float32) * 0.01).astype(cfg.param_dtype),
+        "bonus_u": (jax.random.normal(ks[9], (h, hd), jnp.float32) * 0.1),
+        "ln_x": jnp.ones((d,), jnp.float32),
+        # channel-mix (FFN analogue)
+        "cmix_mu_k": jnp.full((d,), 0.5, cfg.param_dtype),
+        "cmix_mu_r": jnp.full((d,), 0.5, cfg.param_dtype),
+        "cmix_wk": dense_init(ks[10], d, cfg.d_ff, cfg.param_dtype),
+        "cmix_wv": dense_init(ks[11], cfg.d_ff, d, cfg.param_dtype),
+        "cmix_wr": dense_init(ks[12], d, d, cfg.param_dtype),
+    }
+    return p
+
+
+def _token_shift(x: Array, prev: Optional[Array]) -> Array:
+    """x_{t-1}: shift right by one; position 0 takes ``prev`` (decode carry)."""
+    b, s, d = x.shape
+    if s == 1:
+        return prev[:, None, :] if prev is not None else jnp.zeros_like(x)
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    if prev is not None:
+        shifted = shifted.at[:, 0, :].set(prev)
+    return shifted
+
+
+def rwkv_time_mix(
+    params: Dict[str, Array],
+    x: Array,
+    cfg: ArchConfig,
+    state: Optional[Dict[str, Array]] = None,
+) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    cd = cfg.compute_dtype
+
+    prev = state["shift_t"] if state is not None else None
+    xprev = _token_shift(x, prev)
+    dx = xprev - x
+
+    # data-dependent lerp (ddlerp) via low-rank adapters
+    x_base = x + dx * params["mu_base"].astype(cd)
+    lora = jnp.tanh(x_base @ params["lora_a"].astype(cd))  # (B,S,5*LORA)
+    lora = lora.reshape(b, s, 5, LORA_DIM)
+    adj = jnp.einsum("bsfl,fld->bsfd", lora, params["lora_b"].astype(cd))  # (B,S,5,d)
+    mixed = x[:, :, None, :] + dx[:, :, None, :] * (params["mu"].astype(cd) + adj)
+    xr, xk, xv, xw, xg = [mixed[:, :, i, :] for i in range(5)]
+
+    r = (xr @ params["w_r"].astype(cd)).reshape(b, s, h, hd)
+    k = (xk @ params["w_k"].astype(cd)).reshape(b, s, h, hd)
+    v = (xv @ params["w_v"].astype(cd)).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ params["w_g"].astype(cd))
+
+    # data-dependent decay w_t in (0, 1); log w = -exp(dec) used directly by
+    # the chunked path (skips the exp->log round-trip and its AD chain)
+    dec = params["decay_base"] + (
+        jnp.tanh(xw @ params["decay_lora_a"].astype(cd)) @ params["decay_lora_b"].astype(cd)
+    ).astype(jnp.float32)
+    neg_logw = jnp.exp(dec).reshape(b, s, h, hd)  # -log w, > 0
+    w = jnp.exp(-neg_logw)  # (B,S,H,hd)
+
+    u = params["bonus_u"]  # (H, hd)
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+
+    s0 = state["wkv"].astype(jnp.float32) if state is not None else jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(wkv, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, wkv + u[None, :, :, None] * kv)
+        wkv = w_t[..., :, None] * wkv + kv
+        return wkv, y
+
+    chunk = getattr(cfg, "rwkv_chunk", None)
+    if s == 1 and state is not None:
+        inp = (r32[:, 0], k32[:, 0], v32[:, 0], w[:, 0])
+        new_wkv, y = step(s0, inp)
+        y = y[:, None]
+    elif chunk and s % chunk == 0 and s > chunk:
+        new_wkv, y = _rwkv_chunked(
+            r32, k32, v32, -neg_logw, u, s0, chunk, stream_dtype=cd, decay_is_log=True
+        )
+    else:
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r32, k32, v32, w))
+        new_wkv, ys = jax.lax.scan(step, s0, xs)
+        y = jnp.moveaxis(ys, 0, 1)  # (B,S,H,hd)
+
+    # per-head group norm
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = y.reshape(b, s, d) * params["ln_x"]
+    out = (y.astype(cd) * g) @ params["w_o"].astype(cd)
+
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["wkv"] = new_wkv
+        new_state["shift_t"] = x[:, -1, :]
+    return out, new_state
+
+
+def _rwkv_chunked(r, k, v, w, u, s0, chunk: int, stream_dtype=jnp.float32, decay_is_log=False):
+    """Chunk-parallel RWKV-6 (GLA-style): the per-timestep recurrence
+
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T ;  y_t = r_t (S_{t-1} + u k_t v_t^T)
+
+    is evaluated per chunk of C tokens as three MXU matmuls instead of C
+    sequential HBM round-trips of the (hd x hd) state:
+
+        cum_t   = sum_{tau<=t} log w_tau                 (per-channel)
+        y_intra = tril_strict( (r e^{cum_{t-1}}) (k e^{-cum_tau})^T ) v
+                  + (r . u k) v_t                        (diagonal bonus)
+        y_inter = (r e^{cum_{t-1}}) S_chunk_start
+        S_next  = e^{cum_C} . S + (k e^{cum_C - cum_tau})^T v
+
+    log-decay sums are clamped at -30 per chunk for fp32 stability (decay
+    factors below e^-30 contribute nothing).  Used for train/prefill; the
+    sequential scan remains the decode path and the correctness oracle.
+
+    Inputs: r/k/v (B,S,H,hd) f32, w (B,S,H,hd) decay in (0,1),
+    s0 (B,H,hd,hd).  Returns (S_final, y (B,S,H,hd)).
+    """
+    b, s, h, hd = r.shape
+    nc = s // chunk
+    resh = lambda t: t.reshape(b, nc, chunk, h, hd)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)
+    logw = wc if decay_is_log else jnp.log(jnp.clip(wc, 1e-38, 1.0))
+    cum = jnp.cumsum(logw, axis=2)  # (B,nc,C,H,hd), <= 0, decreasing in t
+    cum_prev = cum - logw  # sum_{tau <= t-1}
+    cum_end = cum[:, :, -1:, :, :]
+    # mid-reference factorization: e^{cum_{t-1}-cum_tau} = (e^{cum_{t-1}-m})
+    # (e^{m-cum_tau}) with m = cum_end/2 halves the exponent range; clamping
+    # at +-60 only bites when a channel decays below e^-120 *within one
+    # chunk* (contributions there are zero to fp32 anyway).
+    mid = 0.5 * cum_end
+    # streams in compute dtype (bf16 in production): exponent factors are
+    # bounded by the mid-reference, and all contractions accumulate in f32
+    # via preferred_element_type; the carried state and cumsum stay f32.
+    sd = stream_dtype
+    r_dec = (rc * jnp.exp(jnp.clip(cum_prev - mid, -60.0, 60.0))).astype(sd)
+    k_dec = (kc * jnp.exp(jnp.clip(mid - cum, -60.0, 60.0))).astype(sd)
+    r_in = (rc * jnp.exp(cum_prev)).astype(sd)  # <= 1: inter-chunk query
+    k_rem = (kc * jnp.exp(cum_end - cum)).astype(sd)  # <= 1: decay to end
+    p_end = jnp.exp(cum[:, :, -1])  # (B,nc,H,hd) f32
+    vc_s = vc.astype(sd)
+
+    # intra-chunk attention-like term (strictly causal) + diagonal bonus
+    a = jnp.einsum(
+        "bnthi,bnchi->bnhtc", r_dec, k_dec, preferred_element_type=jnp.float32
+    )  # (B,nc,H,C,C)
+    ti = jnp.arange(chunk)[:, None]
+    tj = jnp.arange(chunk)[None, :]
+    a = jnp.where((tj < ti)[None, None, None], a, 0.0).astype(sd)
+    y_intra = jnp.einsum("bnhtc,bnchj->bnthj", a, vc_s, preferred_element_type=jnp.float32)
+    bonus = jnp.einsum("bnthi,hi,bnthi->bnth", rc, u.astype(jnp.float32), kc)
+    y_intra = y_intra + bonus[..., None] * vc
+
+    # inter-chunk: carried state, one matmul per chunk (scan over nc chunks)
+    def carry_step(S, inp):
+        rd_c, krem_c, v_c, pend_c = inp
+        y = jnp.einsum("bthi,bhij->bthj", rd_c, S.astype(sd), preferred_element_type=jnp.float32)
+        S = pend_c[..., None] * S + jnp.einsum(
+            "bthi,bthj->bhij", krem_c, v_c, preferred_element_type=jnp.float32
+        )
+        return S, y
+
+    xs = (
+        jnp.moveaxis(r_in, 1, 0),
+        jnp.moveaxis(k_rem, 1, 0),
+        jnp.moveaxis(vc_s, 1, 0),
+        jnp.moveaxis(p_end, 1, 0),
+    )
+    s_final, y_inter = jax.lax.scan(carry_step, s0, xs)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 1)
+    return s_final, y.reshape(b, s, h, hd)
+
+
+def rwkv_channel_mix(
+    params: Dict[str, Array],
+    x: Array,
+    cfg: ArchConfig,
+    state: Optional[Dict[str, Array]] = None,
+) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    cd = cfg.compute_dtype
+    prev = state["shift_c"] if state is not None else None
+    xprev = _token_shift(x, prev)
+    dx = xprev - x
+    xk = x + dx * params["cmix_mu_k"].astype(cd)
+    xr = x + dx * params["cmix_mu_r"].astype(cd)
+    k = jnp.square(jax.nn.relu(xk @ params["cmix_wk"].astype(cd)))
+    kv = k @ params["cmix_wv"].astype(cd)
+    out = jax.nn.sigmoid(xr @ params["cmix_wr"].astype(cd)) * kv
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["shift_c"] = x[:, -1, :]
+    return out, new_state
+
+
+def rwkv_init_state(cfg: ArchConfig, batch: int) -> Dict[str, Array]:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    return {
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "shift_t": jnp.zeros((batch, d), cfg.compute_dtype),
+        "shift_c": jnp.zeros((batch, d), cfg.compute_dtype),
+    }

@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    lars,
+    adamw,
+    sgd_momentum,
+    clip_by_global_norm,
+    global_norm,
+    warmup_cosine,
+)
+from repro.optim.compression import bf16_psum, int8_psum_ef, init_error_feedback

@@ -1,0 +1,67 @@
+"""Gradient compression for cross-pod all-reduce (DESIGN.md §7).
+
+Two schemes, both used inside ``shard_map`` train steps where the gradient
+reduction is explicit (under plain pjit the all-reduce is implicit and XLA
+chooses the dtype of the collective):
+
+* ``bf16_psum``          — cast to bf16 before psum (2x volume reduction);
+                           unbiased for mean-reduction at our batch sizes.
+* ``int8_psum_ef``       — per-leaf int8 quantization with error feedback
+                           [1-bit Adam lineage]: the quantization residual is
+                           carried to the next step, making the compressed
+                           SGD trajectory track the uncompressed one.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def bf16_psum(grads, axis_name: str):
+    return jax.tree.map(
+        lambda g: jax.lax.psum(g.astype(jnp.bfloat16), axis_name).astype(jnp.float32),
+        grads,
+    )
+
+
+def _quantize_int8(x: Array, scale: Array = None) -> Tuple[Array, Array]:
+    if scale is None:
+        scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_psum_ef(grads, errors, axis_name: str):
+    """Compressed psum with error feedback.
+
+    All shards quantize against a COMMON per-leaf scale (one scalar pmax —
+    negligible traffic) so the int32 psum of quantized values is exact:
+    sum_i q_i * s == (sum_i q_i) * s.  Per-shard quantization residuals are
+    carried in ``errors`` and added to the next step's gradient (error
+    feedback), so the compressed trajectory tracks the exact one.
+
+    grads/errors: matching pytrees.  Returns (reduced_sum_f32, new_errors).
+    """
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        local_max = jnp.max(jnp.abs(g32))
+        scale = jax.lax.pmax(local_max, axis_name) / 127.0 + 1e-12
+        q, _ = _quantize_int8(g32, scale)
+        deq = q.astype(jnp.float32) * scale
+        new_e = g32 - deq
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name).astype(jnp.float32)
+        return total * scale, new_e
+
+    flat = jax.tree.map(one, grads, errors)
+    pick = lambda i: jax.tree.map(lambda t: t[i], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), pick(1)
+
+
+def init_error_feedback(grads_template):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_template)

@@ -1,0 +1,1 @@
+from repro.parallel.sharding import sharding_context, shard, logical_to_spec, named_sharding

@@ -1,0 +1,4 @@
+from repro.train.train_state import TrainState, create_train_state
+from repro.train.step import make_train_step, cross_entropy
+from repro.train.loop import LoopConfig, run_training
+from repro.train.serve import make_prefill_step, make_decode_step, greedy_generate

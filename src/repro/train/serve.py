@@ -1,0 +1,86 @@
+"""Serving: prefill + decode step factories and a batched greedy generator.
+
+``serve_step`` (the decode step) is what the ``decode_*`` / ``long_*``
+dry-run shapes lower: one new token against a KV cache (or SSM state) of
+``seq_len`` context.  Caches are sequence-sharded over the ``model`` axis
+(attention) per DESIGN.md §4; SSM states are O(1) in context length.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+from repro.models.transformer import forward, init_caches
+
+Array = jax.Array
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill(params, caches, tokens=None, embeds=None, positions=None):
+        out = forward(
+            params,
+            cfg,
+            tokens=tokens,
+            embeds=embeds,
+            positions=positions,
+            caches=caches,
+            cache_len=jnp.asarray(0, jnp.int32),
+        )
+        return out.logits[:, -1:], out.caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode(params, caches, cache_len, tokens=None, embeds=None, positions=None):
+        out = forward(
+            params,
+            cfg,
+            tokens=tokens,
+            embeds=embeds,
+            positions=positions,
+            caches=caches,
+            cache_len=cache_len,
+        )
+        return out.logits[:, 0], out.caches
+
+    return decode
+
+
+def greedy_generate(
+    params,
+    cfg: ArchConfig,
+    prompt_tokens: Array,
+    max_new_tokens: int,
+    max_len: Optional[int] = None,
+) -> Array:
+    """Host-loop batched greedy decoding (token-id models)."""
+    b, s = prompt_tokens.shape[:2]
+    max_len = max_len or (s + max_new_tokens)
+    caches = init_caches(cfg, b, max_len)
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+
+    logits, caches = prefill(params, caches, tokens=prompt_tokens)
+    if cfg.frontend == "audio_codes":
+        next_tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)  # (B, n_q)
+        toks = [next_tok[:, None, :]]
+    else:
+        next_tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)  # (B,)
+        toks = [next_tok[:, None]]
+
+    pos = s
+    for _ in range(max_new_tokens - 1):
+        inp = toks[-1]
+        logits, caches = decode(
+            params, caches, jnp.asarray(pos, jnp.int32), tokens=inp
+        )
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        toks.append(nxt[:, None, :] if cfg.frontend == "audio_codes" else nxt[:, None])
+        pos += 1
+    return jnp.concatenate(toks, axis=1)

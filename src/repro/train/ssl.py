@@ -1,0 +1,100 @@
+"""The paper's own setting: Siamese MLP backbone + projector, trained with
+Barlow Twins-style / VICReg-style losses (baseline R_off or proposed R_sum).
+
+The backbone is deliberately simple (the paper's contribution is the loss,
+not the ResNet); the projector is the standard 3-layer MLP with BN-like
+standardization handled inside the loss.  ``make_ssl_train_step`` plugs into
+the same optimizer/checkpoint machinery as the LM path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import DecorrConfig, ssl_loss
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
+from repro.train.train_state import TrainState
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SSLModelConfig:
+    input_dim: int = 3072
+    backbone_widths: Tuple[int, ...] = (512, 512)
+    projector_widths: Tuple[int, ...] = (2048, 2048, 2048)
+
+
+def init_ssl_params(key: Array, cfg: SSLModelConfig) -> Dict:
+    params = {"backbone": [], "projector": []}
+    dims_b = (cfg.input_dim,) + cfg.backbone_widths
+    dims_p = (cfg.backbone_widths[-1],) + cfg.projector_widths
+    keys = jax.random.split(key, len(dims_b) + len(dims_p))
+    ki = 0
+    for i in range(len(dims_b) - 1):
+        w = jax.random.normal(keys[ki], (dims_b[i], dims_b[i + 1]), jnp.float32)
+        params["backbone"].append(
+            {"w": w / jnp.sqrt(dims_b[i]), "b": jnp.zeros((dims_b[i + 1],))}
+        )
+        ki += 1
+    for i in range(len(dims_p) - 1):
+        w = jax.random.normal(keys[ki], (dims_p[i], dims_p[i + 1]), jnp.float32)
+        params["projector"].append(
+            {"w": w / jnp.sqrt(dims_p[i]), "b": jnp.zeros((dims_p[i + 1],))}
+        )
+        ki += 1
+    return params
+
+
+def backbone_apply(params: Dict, x: Array) -> Array:
+    h = x
+    for layer in params["backbone"]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+    return h
+
+
+def projector_apply(params: Dict, h: Array) -> Array:
+    n = len(params["projector"])
+    for i, layer in enumerate(params["projector"]):
+        h = h @ layer["w"] + layer["b"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def embed(params: Dict, x: Array) -> Array:
+    return projector_apply(params, backbone_apply(params, x))
+
+
+def make_ssl_train_step(
+    model_cfg: SSLModelConfig,
+    loss_cfg: DecorrConfig,
+    optimizer: Optimizer,
+    schedule,
+    clip_norm=None,
+):
+    def loss_fn(params, batch, rng):
+        v1, v2 = batch["view1"], batch["view2"]
+        z1 = embed(params, v1)
+        z2 = embed(params, v2)
+        loss, metrics = ssl_loss(z1, z2, loss_cfg, perm_key=rng)
+        return loss, metrics
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        rng = jax.random.fold_in(state.rng, state.step)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch, rng
+        )
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            metrics["grad_norm"] = gnorm
+        lr = schedule(state.step)
+        metrics["lr"] = lr
+        new_params, new_opt = optimizer.update(grads, state.opt_state, state.params, lr)
+        return TrainState(state.step + 1, new_params, new_opt, state.rng), metrics
+
+    return train_step, loss_fn

@@ -1,0 +1,24 @@
+"""Train state pytree."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    step: jax.Array  # int32 scalar
+    params: Any
+    opt_state: Any
+    rng: jax.Array  # PRNG key
+
+
+def create_train_state(params, optimizer, seed: int = 0) -> TrainState:
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt_state=optimizer.init(params),
+        rng=jax.random.PRNGKey(seed),
+    )

@@ -1,0 +1,94 @@
+"""Checkpointing: roundtrip (incl. bf16), atomicity, retention, resume."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    list_steps,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {
+            "w": jax.random.normal(k, (4, 6), jnp.float32),
+            "emb": jax.random.normal(k, (8, 4)).astype(jnp.bfloat16),
+        },
+        "step": jnp.asarray(7, jnp.int32),
+        "nested": [{"m": jnp.ones((3,), jnp.float32)}],
+    }
+
+
+def test_roundtrip_bf16(tmp_path):
+    state = _state()
+    save_checkpoint(str(tmp_path), 7, state)
+    restored = restore_checkpoint(str(tmp_path), 7, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    state = _state()
+    save_checkpoint(str(tmp_path), 5, state)
+    d = save_checkpoint(str(tmp_path), 10, state)
+    os.remove(os.path.join(d, "COMMIT"))  # simulate torn write
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_manager_keep_n(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), interval=1, keep=2, use_async=False)
+    state = _state()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    assert list_steps(str(tmp_path)) == [3, 4]
+
+
+def test_manager_restore_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), interval=1, keep=3, use_async=False)
+    state = _state()
+    mgr.save(3, state)
+    restored, step = mgr.restore_latest(state)
+    assert step == 3
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(state["params"]["w"])
+    )
+
+
+def test_restore_empty_dir_returns_none(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), use_async=False)
+    restored, step = mgr.restore_latest(_state())
+    assert restored is None and step == 0
+
+
+def test_async_checkpointer_ordered(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), interval=1, keep=10, use_async=True)
+    state = _state()
+    for s in range(1, 6):
+        mgr.save(s, state)
+    mgr.wait()
+    assert list_steps(str(tmp_path)) == [1, 2, 3, 4, 5]
+
+
+def test_elastic_restore_new_mesh(tmp_path):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.ft.elastic import elastic_restore
+
+    state = _state()
+    save_checkpoint(str(tmp_path), 2, state)
+    mesh = jax.make_mesh((1,), ("data",))
+    restored = elastic_restore(str(tmp_path), 2, state, mesh, spec_fn=lambda p, l: P())
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(state["params"]["w"])
+    )

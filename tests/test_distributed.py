@@ -1,0 +1,207 @@
+"""Distributed-mode tests.  Multi-device cases run in a SUBPROCESS with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the main pytest
+process keeps its single CPU device (per the assignment: only dryrun.py may
+fake the device count globally)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_in_subprocess(body: str, n_devices: int = 8) -> dict:
+    """Run ``body`` (which must print a final JSON line) under N fake devices."""
+    code = textwrap.dedent(
+        f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_devices}"
+        import json
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        """
+    ) + textwrap.dedent(body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=420
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}\nstdout:\n{out.stdout[-1000:]}"
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_r_sum_global_matches_single_device():
+    res = run_in_subprocess(
+        """
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.core import distributed as dist
+        from repro.core import regularizers as regs
+
+        mesh = jax.make_mesh((8,), ("data",))
+        n, d = 64, 24
+        z1 = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+        z2 = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+
+        @partial(shard_map, mesh=mesh, in_specs=(P("data"), P("data")), out_specs=P())
+        def global_reg(a, b):
+            return dist.r_sum_global(a, b, axis_name="data", q=2, scale=a.shape[0])[None]
+
+        got = float(global_reg(z1, z2)[0])
+        want = float(regs.r_sum(z1, z2, q=2, scale=n))
+        grouped = shard_map(
+            lambda a, b: dist.r_sum_global(a, b, axis_name="data", q=2, block_size=8, scale=a.shape[0])[None],
+            mesh=mesh, in_specs=(P("data"), P("data")), out_specs=P())
+        got_g = float(grouped(z1, z2)[0])
+        want_g = float(regs.r_sum_grouped(z1, z2, 8, q=2, scale=n))
+        print(json.dumps({"got": got, "want": want, "got_g": got_g, "want_g": want_g}))
+        """
+    )
+    assert abs(res["got"] - res["want"]) < 1e-2 * max(abs(res["want"]), 1)
+    assert abs(res["got_g"] - res["want_g"]) < 1e-2 * max(abs(res["want_g"]), 1)
+
+
+def test_r_sum_tp_feature_sharded_matches_single_device():
+    res = run_in_subprocess(
+        """
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.core import distributed as dist
+        from repro.core import regularizers as regs
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        n, d = 32, 32
+        z1 = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+        z2 = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(P("data", "model"), P("data", "model")), out_specs=P())
+        def tp_reg(a, b):
+            # scale is the LOCAL batch size; r_sum_tp multiplies by the
+            # batch-axis size itself
+            return dist.r_sum_tp(a, b, model_axis="model", batch_axis="data",
+                                 q=2, scale=a.shape[0])[None]
+
+        got = float(tp_reg(z1, z2)[0])
+        want = float(regs.r_sum(z1, z2, q=2, scale=n))
+        print(json.dumps({"got": got, "want": want}))
+        """
+    )
+    assert abs(res["got"] - res["want"]) < 1e-2 * max(abs(res["want"]), 1)
+
+
+def test_compressed_gradient_allreduce():
+    res = run_in_subprocess(
+        """
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.optim import compression as comp
+
+        mesh = jax.make_mesh((8,), ("data",))
+        g = jax.random.normal(jax.random.PRNGKey(0), (64, 16))
+        e = jnp.zeros((64, 16))
+
+        @partial(shard_map, mesh=mesh, in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data")))
+        def int8_reduce(gs, es):
+            out, new_e = comp.int8_psum_ef({"g": gs}, {"g": es}, "data")
+            return out["g"] / 8.0, new_e["g"]
+
+        reduced, err = int8_reduce(g, e)
+        exact = jnp.mean(g.reshape(8, 8, 16), axis=0)
+        exact_full = jnp.tile(exact, (8, 1))
+        rel = float(jnp.linalg.norm(reduced - exact_full) / jnp.linalg.norm(exact_full))
+
+        @partial(shard_map, mesh=mesh, in_specs=(P("data"),), out_specs=P("data"))
+        def bf16_reduce(gs):
+            return comp.bf16_psum({"g": gs}, "data")["g"] / 8.0
+
+        red2 = bf16_reduce(g)
+        rel2 = float(jnp.linalg.norm(red2 - exact_full) / jnp.linalg.norm(exact_full))
+        print(json.dumps({"rel_int8": rel, "rel_bf16": rel2}))
+        """
+    )
+    assert res["rel_int8"] < 0.05
+    assert res["rel_bf16"] < 0.01
+
+
+def test_error_feedback_converges_over_steps():
+    """With error feedback, the accumulated compressed sum tracks the true
+    sum over steps even though each step quantizes to int8."""
+    res = run_in_subprocess(
+        """
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.optim import compression as comp
+
+        mesh = jax.make_mesh((8,), ("data",))
+        key = jax.random.PRNGKey(0)
+        e = jnp.zeros((64, 4))
+        acc_c = jnp.zeros((8, 4))
+        acc_t = jnp.zeros((8, 4))
+
+        @partial(shard_map, mesh=mesh, in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data")))
+        def step(gs, es):
+            out, new_e = comp.int8_psum_ef({"g": gs}, {"g": es}, "data")
+            return out["g"], new_e["g"]
+
+        for i in range(20):
+            g = jax.random.normal(jax.random.fold_in(key, i), (64, 4))
+            red, e = step(g, e)
+            acc_c = acc_c + red[:8]
+            acc_t = acc_t + jnp.sum(g.reshape(8, 8, 4), axis=0)
+        rel = float(jnp.linalg.norm(acc_c - acc_t) / jnp.linalg.norm(acc_t))
+        print(json.dumps({"rel": rel}))
+        """
+    )
+    assert res["rel"] < 0.02
+
+
+def test_sharded_lm_train_step_runs_spmd():
+    """A reduced arch train step under a (2, 4) mesh with real shardings —
+    value must match the single-device step."""
+    res = run_in_subprocess(
+        """
+        import dataclasses
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.models import init_params
+        from repro.optim import adamw, warmup_cosine
+        from repro.parallel.sharding import sharding_context
+        from repro.train import create_train_state, make_train_step
+        from repro.data import LMDataConfig, lm_batch
+
+        cfg = get_config("codeqwen1.5-7b").reduced()
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        opt = adamw()
+        step = make_train_step(cfg, opt, warmup_cosine(1e-3, 2, 10))
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        state = create_train_state(params, opt)
+        dcfg = LMDataConfig(vocab_size=cfg.vocab_size, batch=8, seq_len=16)
+        batch = {k: jnp.asarray(v) for k, v in lm_batch(dcfg, 0).items()}
+
+        # single device reference
+        _, m_ref = jax.jit(step)(state, batch)
+
+        def sharded_step(s, b):
+            with sharding_context(mesh):
+                return step(s, b)
+        bsh = NamedSharding(mesh, P("data", None))
+        batch_sh = {k: jax.device_put(v, bsh) for k, v in batch.items()}
+        with sharding_context(mesh):
+            _, m = jax.jit(sharded_step)(state, batch_sh)
+        print(json.dumps({"loss": float(m["loss"]), "ref": float(m_ref["loss"]),
+                          "n_dev": len(jax.devices())}))
+        """
+    )
+    assert res["n_dev"] == 8
+    assert abs(res["loss"] - res["ref"]) < 5e-3 * max(abs(res["ref"]), 1)

@@ -1,0 +1,100 @@
+"""The dry-run's HLO analyzer must count scan (while) bodies trip-exactly."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import analyze_hlo, roofline_terms
+
+
+def test_plain_matmul_flops_exact():
+    m, k, n = 64, 32, 48
+
+    def f(a, b):
+        return a @ b
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32), jax.ShapeDtypeStruct((k, n), jnp.float32)
+    ).compile()
+    a = analyze_hlo(compiled.as_text())
+    assert a.flops == 2.0 * m * k * n
+
+
+def test_scan_flops_scaled_by_trip_count():
+    trips, m = 13, 32
+
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((m, m), jnp.float32),
+        jax.ShapeDtypeStruct((trips, m, m), jnp.float32),
+    ).compile()
+    a = analyze_hlo(compiled.as_text())
+    want = trips * 2.0 * m**3
+    # trip-count heuristic tolerance: exact or within one trip
+    assert want * (trips - 1) / trips <= a.flops <= want * (trips + 1) / trips, (a.flops, want)
+    assert any(t == trips for t in a.trip_counts.values()), a.trip_counts
+
+
+def test_nested_scan_multiplies():
+    t1, t2, m = 4, 6, 16
+
+    def f(x, ws):
+        def outer(c, wrow):
+            def inner(ci, w):
+                return ci @ w, None
+
+            c2, _ = jax.lax.scan(inner, c, wrow)
+            return c2, None
+
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((m, m), jnp.float32),
+        jax.ShapeDtypeStruct((t1, t2, m, m), jnp.float32),
+    ).compile()
+    a = analyze_hlo(compiled.as_text())
+    want = t1 * t2 * 2.0 * m**3
+    assert 0.7 * want <= a.flops <= 1.3 * want, (a.flops, want)
+
+
+def test_grad_of_scan_counts_fwd_and_bwd():
+    trips, m = 8, 16
+
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+
+        y, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(y)
+
+    compiled = jax.jit(jax.grad(f, argnums=1)).lower(
+        jax.ShapeDtypeStruct((m, m), jnp.float32),
+        jax.ShapeDtypeStruct((trips, m, m), jnp.float32),
+    ).compile()
+    a = analyze_hlo(compiled.as_text())
+    fwd = trips * 2.0 * m**3
+    # fwd + ~2x bwd (dot grads) => at least 2.5x fwd
+    assert a.flops >= 2.5 * fwd, (a.flops, fwd)
+
+
+def test_roofline_terms_structure():
+    def f(a, b):
+        return a @ b
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((256, 256), jnp.float32),
+        jax.ShapeDtypeStruct((256, 256), jnp.float32),
+    ).compile()
+    a = analyze_hlo(compiled.as_text())
+    t = roofline_terms(a)
+    assert set(t) >= {"compute_s", "memory_s", "collective_s", "dominant", "bound_s"}
+    assert t["dominant"] in ("compute", "memory", "collective")
+    assert t["bound_s"] == max(t["compute_s"], t["memory_s"], t["collective_s"])
+    assert t["collective_s"] == 0.0  # single device

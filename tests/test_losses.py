@@ -1,0 +1,99 @@
+"""Full loss functions (Eq. 14 / Eq. 15): values, baseline recovery, grads."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import losses as L
+from repro.core import regularizers as regs
+
+
+def _views(n=32, d=24, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    base = jax.random.normal(k1, (n, d))
+    return base + 0.1 * jax.random.normal(k2, (n, d)), base
+
+
+class TestBarlowTwins:
+    def test_baseline_matches_manual(self):
+        z1, z2 = _views()
+        cfg = L.DecorrConfig(style="bt", reg="off", lam=0.005)
+        loss, m = L.barlow_twins_loss(z1, z2, cfg)
+        s1, s2 = L.standardize(z1), L.standardize(z2)
+        c = regs.cross_correlation_matrix(s1, s2)
+        manual = jnp.sum((1 - jnp.diagonal(c)) ** 2) + 0.005 * regs.r_off(c)
+        np.testing.assert_allclose(loss, manual, rtol=1e-4)
+
+    def test_proposed_b1_q2_equals_baseline(self):
+        z1, z2 = _views()
+        base = L.barlow_twins_loss(z1, z2, L.DecorrConfig(style="bt", reg="off"))[0]
+        prop = L.barlow_twins_loss(
+            z1, z2, L.DecorrConfig(style="bt", reg="sum", block_size=1, q=2, permute=False)
+        )[0]
+        np.testing.assert_allclose(base, prop, rtol=1e-5)
+
+    def test_identical_views_minimize_invariance(self):
+        z, _ = _views()
+        cfg = L.DecorrConfig(style="bt", reg="sum")
+        _, m = L.barlow_twins_loss(z, z, cfg)
+        np.testing.assert_allclose(m["bt_invariance"], 0.0, atol=1e-6)
+
+    def test_gradients_finite(self):
+        z1, z2 = _views()
+        for cfg in (
+            L.DecorrConfig(style="bt", reg="off"),
+            L.DecorrConfig(style="bt", reg="sum", q=1),
+            L.DecorrConfig(style="bt", reg="sum", block_size=8, q=2),
+        ):
+            g = jax.grad(lambda a, b: L.barlow_twins_loss(a, b, cfg, jax.random.PRNGKey(0))[0], argnums=(0, 1))(z1, z2)
+            assert all(bool(jnp.all(jnp.isfinite(x))) for x in g)
+
+    def test_permutation_leaves_loss_distribution(self):
+        # permuting features does not change R_off; R_sum changes (weaker reg)
+        z1, z2 = _views()
+        cfg_off = L.DecorrConfig(style="bt", reg="off")
+        perm = jax.random.permutation(jax.random.PRNGKey(3), 24)
+        a = L.barlow_twins_loss(z1, z2, cfg_off)[0]
+        b = L.barlow_twins_loss(z1[:, perm], z2[:, perm], cfg_off)[0]
+        np.testing.assert_allclose(a, b, rtol=1e-4)
+
+
+class TestVICReg:
+    def test_baseline_matches_manual(self):
+        z1, z2 = _views()
+        cfg = L.DecorrConfig(style="vic", reg="off", alpha=25.0, mu=25.0, nu=1.0)
+        loss, _ = L.vicreg_loss(z1, z2, cfg)
+        n, d = z1.shape
+        inv = jnp.mean(jnp.sum((z1 - z2) ** 2, axis=-1))
+        c1, c2 = L.center(z1), L.center(z2)
+        k1 = regs.cross_correlation_matrix(c1, c1, scale=n - 1)
+        k2 = regs.cross_correlation_matrix(c2, c2, scale=n - 1)
+        manual = (
+            25.0 * inv
+            + (25.0 / d) * (regs.r_var_from_embeddings(c1) + regs.r_var_from_embeddings(c2))
+            + (1.0 / d) * (regs.r_off(k1) + regs.r_off(k2))
+        )
+        np.testing.assert_allclose(loss, manual, rtol=1e-4)
+
+    @pytest.mark.parametrize("q", [1, 2])
+    def test_proposed_runs_and_differentiates(self, q):
+        z1, z2 = _views()
+        cfg = L.DecorrConfig(style="vic", reg="sum", q=q, block_size=8)
+        g = jax.grad(lambda a: L.vicreg_loss(a, z2, cfg, jax.random.PRNGKey(0))[0])(z1)
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+
+class TestEvalMetrics:
+    def test_normalized_regularizers_bounded(self):
+        z1, z2 = _views()
+        v = float(L.normalized_bt_regularizer(z1, z2))
+        assert 0.0 <= v <= 1.5  # mean squared correlation
+        w = float(L.normalized_vic_regularizer(z1, z2))
+        assert w >= 0.0
+
+    def test_decorrelated_embeddings_score_near_zero(self):
+        # large-n iid gaussian features are ~uncorrelated
+        z = jax.random.normal(jax.random.PRNGKey(0), (4096, 8))
+        v = float(L.normalized_bt_regularizer(z, z + 0.0))
+        assert v < 0.01

@@ -1,0 +1,84 @@
+"""Optimizers, schedules, clipping, gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    adamw,
+    clip_by_global_norm,
+    global_norm,
+    lars,
+    sgd_momentum,
+    warmup_cosine,
+)
+
+
+def _quadratic_losses(opt, lr=0.1, steps=60, dim=8):
+    target = jnp.linspace(-1, 1, dim)
+    params = {"w": jnp.zeros((dim, dim)) + 0.5, "b": jnp.zeros((dim,))}
+    state = opt.init(params)
+    losses = []
+
+    def loss_fn(p):
+        return jnp.sum((p["w"] @ target + p["b"] - target) ** 2)
+
+    for i in range(steps):
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, state = opt.update(g, state, params, jnp.asarray(lr))
+        losses.append(float(loss))
+    return losses
+
+
+@pytest.mark.parametrize(
+    "opt,lr",
+    [(adamw(weight_decay=0.0), 0.05), (lars(weight_decay=0.0), 0.2), (sgd_momentum(), 0.01)],
+)
+def test_optimizers_converge_on_quadratic(opt, lr):
+    losses = _quadratic_losses(opt, lr)
+    assert losses[-1] < 0.1 * losses[0], losses[::10]
+
+
+def test_adamw_bf16_moments_still_converge():
+    opt = adamw(moment_dtype=jnp.bfloat16, weight_decay=0.0)
+    losses = _quadratic_losses(opt, 0.05)
+    assert losses[-1] < 0.2 * losses[0]
+
+
+def test_lars_excludes_bias_from_adaptation():
+    opt = lars()
+    params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    state = opt.init(params)
+    grads = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    new_params, _ = opt.update(grads, state, params, jnp.asarray(1.0))
+    # bias uses raw lr (delta 1.0); weight is trust-scaled (much smaller)
+    db = float(jnp.max(jnp.abs(new_params["b"] - params["b"])))
+    dw = float(jnp.max(jnp.abs(new_params["w"] - params["w"])))
+    assert db > 0.9
+    assert dw < 0.1
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    np.testing.assert_allclose(global_norm(clipped), 1.0, rtol=1e-5)
+    assert float(norm) > 100.0
+
+
+def test_warmup_cosine_shape():
+    sched = warmup_cosine(1.0, warmup_steps=10, total_steps=100)
+    assert float(sched(0)) == 0.0
+    np.testing.assert_allclose(float(sched(10)), 1.0, rtol=1e-5)
+    assert float(sched(55)) < 1.0
+    assert float(sched(100)) <= float(sched(55))
+    np.testing.assert_allclose(float(sched(5)), 0.5, rtol=1e-5)
+
+
+def test_int8_quantize_roundtrip_error_bounded():
+    from repro.optim.compression import _quantize_int8
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+    q, scale = _quantize_int8(x)
+    err = jnp.abs(q.astype(jnp.float32) * scale - x)
+    assert float(jnp.max(err)) <= float(scale) * 0.51

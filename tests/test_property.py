@@ -1,0 +1,128 @@
+"""Hypothesis property tests for the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import losses as L
+from repro.core import regularizers as regs
+from repro.core import sumvec as sv
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _data(n, d, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return (
+        jax.random.normal(k1, (n, d), jnp.float32),
+        jax.random.normal(k2, (n, d), jnp.float32),
+    )
+
+
+@given(n=st.integers(2, 24), d=st.integers(2, 48), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_fft_sumvec_equals_matrix_sumvec(n, d, seed):
+    z1, z2 = _data(n, d, seed)
+    c = regs.cross_correlation_matrix(z1, z2, scale=n)
+    np.testing.assert_allclose(
+        sv.sumvec_fft(z1, z2, scale=float(n)),
+        sv.sumvec_from_matrix(c),
+        atol=5e-3 * np.sqrt(n * d),
+    )
+
+
+@given(n=st.integers(2, 16), d=st.integers(2, 40), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_sumvec_total_equals_matrix_total(n, d, seed):
+    # the components partition C: sum(sumvec) == sum(C) exactly
+    z1, z2 = _data(n, d, seed)
+    c = regs.cross_correlation_matrix(z1, z2, scale=n)
+    np.testing.assert_allclose(
+        jnp.sum(sv.sumvec_fft(z1, z2, scale=float(n))), jnp.sum(c), atol=1e-2
+    )
+
+
+@given(
+    n=st.integers(2, 16),
+    d=st.integers(4, 40),
+    b=st.integers(2, 16),
+    q=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_grouped_matches_matrix_oracle(n, d, b, q, seed):
+    z1, z2 = _data(n, d, seed)
+    c = regs.cross_correlation_matrix(z1, z2, scale=n)
+    got = regs.r_sum_grouped(z1, z2, b, q=q, scale=float(n))
+    want = regs.r_sum_grouped_from_matrix(c, b, q=q)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@given(d=st.integers(2, 64), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_parseval_identity(d, seed):
+    s = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    g = jnp.fft.rfft(s)
+    sq, s0 = sv.sq_sum_and_zeroth_from_freq(g, d)
+    np.testing.assert_allclose(sq, jnp.sum(s**2), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(s0, s[0], atol=1e-4)
+
+
+@given(n=st.integers(3, 16), d=st.integers(2, 32), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_r_off_permutation_invariant(n, d, seed):
+    z1, z2 = _data(n, d, seed)
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), d)
+    a = regs.r_off(regs.cross_correlation_matrix(z1, z2, scale=n))
+    b = regs.r_off(regs.cross_correlation_matrix(z1[:, perm], z2[:, perm], scale=n))
+    np.testing.assert_allclose(a, b, rtol=1e-3)
+
+
+@given(n=st.integers(3, 16), d=st.integers(4, 32), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_r_sum_nonnegative_and_relaxation(n, d, seed):
+    # 0 <= R_sum(C)  and  R_sum <= (d-1) * R_off upper bound via Cauchy-Schwarz
+    z1, z2 = _data(n, d, seed)
+    c = regs.cross_correlation_matrix(z1, z2, scale=n)
+    rs = float(regs.r_sum(z1, z2, q=2, scale=float(n)))
+    ro = float(regs.r_off(c))
+    assert rs >= -1e-5
+    assert rs <= d * ro + 1e-3  # each sumvec comp is a sum of d elements
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_standardize_properties(seed):
+    z = 3.0 + 2.0 * jax.random.normal(jax.random.PRNGKey(seed), (64, 8))
+    s = L.standardize(z)
+    np.testing.assert_allclose(jnp.mean(s, axis=0), 0.0, atol=1e-4)
+    np.testing.assert_allclose(jnp.var(s, axis=0), 1.0, atol=1e-2)
+
+
+@given(
+    n=st.integers(2, 12),
+    d=st.integers(2, 24),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_loss_finite_across_dtypes(n, d, dtype, seed):
+    z1, z2 = _data(n, d, seed)
+    z1, z2 = z1.astype(dtype), z2.astype(dtype)
+    for style in ("bt", "vic"):
+        cfg = L.DecorrConfig(style=style, reg="sum", q=2)
+        loss, _ = L.ssl_loss(z1, z2, cfg, jax.random.PRNGKey(0))
+        assert bool(jnp.isfinite(loss))
+
+
+@given(steps=st.integers(1, 5), seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_permutation_deterministic_per_step(steps, seed):
+    from repro.core.permutation import permutation_for_step
+
+    key = jax.random.PRNGKey(seed)
+    p1 = permutation_for_step(key, steps, 16)
+    p2 = permutation_for_step(key, steps, 16)
+    np.testing.assert_array_equal(p1, p2)
+    assert sorted(np.asarray(p1).tolist()) == list(range(16))

@@ -1,0 +1,108 @@
+"""Regularizer equivalences the paper states (and the Gram-trick baseline)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import losses as L
+from repro.core import regularizers as regs
+
+
+def _views(n=16, d=24, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return jax.random.normal(k1, (n, d)), jax.random.normal(k2, (n, d))
+
+
+class TestROff:
+    def test_matches_manual(self):
+        z1, z2 = _views()
+        c = regs.cross_correlation_matrix(z1, z2, scale=16)
+        manual = sum(
+            float(c[i, j]) ** 2 for i in range(24) for j in range(24) if i != j
+        )
+        np.testing.assert_allclose(regs.r_off(c), manual, rtol=1e-4)
+
+    def test_gram_trick_matches(self):
+        from repro.kernels.xcorr_offdiag.ops import r_off_gram
+
+        z1, z2 = _views()
+        c = regs.cross_correlation_matrix(z1, z2, scale=16)
+        np.testing.assert_allclose(
+            r_off_gram(z1, z2, scale=16.0), regs.r_off(c), rtol=1e-4
+        )
+
+    def test_gram_trick_gradients_match(self):
+        from repro.kernels.xcorr_offdiag.ops import off_diagonal_sq_sum
+
+        z1, z2 = _views(n=8, d=12)
+        f_ref = lambda a, b: regs.r_off(regs.cross_correlation_matrix(a, b, scale=8))
+        f_kern = lambda a, b: off_diagonal_sq_sum(a, b, scale=8.0)
+        g_ref = jax.grad(f_ref, argnums=(0, 1))(z1, z2)
+        g_kern = jax.grad(f_kern, argnums=(0, 1))(z1, z2)
+        np.testing.assert_allclose(g_kern[0], g_ref[0], atol=1e-4)
+        np.testing.assert_allclose(g_kern[1], g_ref[1], atol=1e-4)
+
+
+class TestRSum:
+    @pytest.mark.parametrize("q", [1, 2])
+    def test_matches_matrix_oracle(self, q):
+        z1, z2 = _views()
+        c = regs.cross_correlation_matrix(z1, z2, scale=16)
+        np.testing.assert_allclose(
+            regs.r_sum(z1, z2, q=q, scale=16.0), regs.r_sum_from_matrix(c, q), rtol=1e-3
+        )
+
+    def test_b_equals_d_recovers_ungrouped(self):
+        z1, z2 = _views()
+        a = regs.r_sum_auto(z1, z2, q=2, block_size=24, scale=16.0)
+        b = regs.r_sum(z1, z2, q=2, scale=16.0)
+        np.testing.assert_allclose(a, b, rtol=1e-5)
+
+    def test_b1_q2_recovers_r_off(self):
+        # paper §4.4: R_sum^(1) == R_off when q=2
+        z1, z2 = _views()
+        c = regs.cross_correlation_matrix(z1, z2, scale=16)
+        a = regs.r_sum_auto(z1, z2, q=2, block_size=1, scale=16.0)
+        np.testing.assert_allclose(a, regs.r_off(c), rtol=1e-5)
+
+    @pytest.mark.parametrize("b,q", [(4, 1), (4, 2), (8, 1), (8, 2), (7, 2)])
+    def test_grouped_matches_matrix_oracle(self, b, q):
+        z1, z2 = _views()
+        c = regs.cross_correlation_matrix(z1, z2, scale=16)
+        got = regs.r_sum_grouped(z1, z2, b, q=q, scale=16.0)
+        want = regs.r_sum_grouped_from_matrix(c, b, q=q)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    def test_relaxation_bound(self):
+        # R_sum is a relaxation: minimizers of R_off also minimize R_sum;
+        # for C with zero off-diagonals, R_sum(C) == 0
+        n, d = 16, 12
+        z = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+        z1 = L.standardize(z)
+        r = regs.r_sum(z1, z1, q=2, scale=float(n))
+        # C(A,A) of standardized data has unit diagonal; sumvec tail sums
+        # off-diagonals only — finite and >= 0
+        assert float(r) >= 0.0
+
+    def test_zero_offdiag_implies_zero_r_sum(self):
+        # minimizers of R_off also minimize R_sum (paper §4.1): construct
+        # views whose cross-correlation is exactly diagonal
+        n, d = 64, 8
+        z = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+        q, _ = jnp.linalg.qr(z)  # orthonormal columns -> C(A,A) diagonal
+        z1 = q * jnp.sqrt(n)
+        r = float(regs.r_sum(z1, z1, q=2, scale=float(n)))
+        # fp tolerance relative to the d^2-scale Parseval terms that cancel
+        assert abs(r) < 1e-5 * d * d
+
+
+class TestRVar:
+    def test_zero_when_std_above_gamma(self):
+        z = 10.0 * jax.random.normal(jax.random.PRNGKey(0), (256, 8))
+        assert float(regs.r_var_from_embeddings(z, gamma=1.0)) < 1e-3
+
+    def test_positive_for_collapsed(self):
+        z = jnp.zeros((64, 8))
+        v = float(regs.r_var_from_embeddings(z, gamma=1.0))
+        assert v > 7.5  # ~ d * gamma
