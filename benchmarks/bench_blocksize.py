@@ -3,6 +3,10 @@
 The paper's finding: b >= ~16 shows no significant time/memory increase over
 ungrouped; moderate b (128) is the accuracy sweet spot.  Here we chart the
 compiled FLOPs/bytes + CPU wall time across b.
+
+The b values are no longer a hand-picked list: they come from the tuner's
+candidate enumeration (``repro.tune.grouped_block_size_candidates``),
+subsampled to keep the suite's wall time bounded.
 """
 
 from __future__ import annotations
@@ -11,10 +15,24 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import compiled_costs, fmt_row, sds, time_fn
+from repro import tune
 from repro.core import regularizers as regs
 
 N, D = 256, 2048
-BS = (2, 8, 32, 128, 512, 2048)
+MAX_POINTS = 6
+
+
+def block_sizes(d: int = D, max_points: int = MAX_POINTS) -> list[int]:
+    """The tuner's legal b candidates for width d, evenly subsampled."""
+    if max_points < 1:
+        raise ValueError(f"max_points must be >= 1, got {max_points}")
+    bs = tune.grouped_block_size_candidates(d)
+    if len(bs) <= max_points:
+        return bs
+    if max_points == 1:
+        return [bs[-1]]
+    stride = (len(bs) - 1) / (max_points - 1)
+    return [bs[round(i * stride)] for i in range(max_points)]
 
 
 def run():
@@ -22,7 +40,7 @@ def run():
     k1, k2 = jax.random.split(jax.random.PRNGKey(0))
     z1 = jax.random.normal(k1, (N, D))
     z2 = jax.random.normal(k2, (N, D))
-    for b in BS:
+    for b in block_sizes():
         fn = lambda a, c: regs.r_sum_auto(a, c, q=2, block_size=b, scale=float(N))
         vg = lambda a, c: jax.value_and_grad(fn, argnums=(0, 1))(a, c)
         costs = compiled_costs(vg, sds((N, D)), sds((N, D)))

@@ -1,0 +1,80 @@
+"""Default-vs-tuned kernel configs on the ssl-paper shapes.
+
+Runs the dry-mode (compiled-HLO) tuner over every kernel shape reached from
+the paper's SSL setting (batch x projector width), then writes
+``BENCH_tune.json`` recording default and tuned configs with their compiled
+FLOPs/bytes.  The tuner's ``guard_default`` invariant means tuned is never
+worse than default on either metric — this file is the perf trajectory's
+paper trail.
+
+Env knobs (for CI): BENCH_TUNE_N / BENCH_TUNE_D override the ssl-paper
+batch/width; BENCH_TUNE_OUT overrides the output path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import fmt_row
+
+OUT_PATH = os.environ.get("BENCH_TUNE_OUT", "BENCH_tune.json")
+
+
+def _shapes() -> list[tuple[int, int]]:
+    n_env, d_env = os.environ.get("BENCH_TUNE_N"), os.environ.get("BENCH_TUNE_D")
+    if n_env and d_env:
+        return [(int(n_env), int(d_env))]
+    from repro.tune.cli import arch_shapes
+
+    return arch_shapes("ssl-paper")
+
+
+def run():
+    from repro import tune
+    from repro.tune.cli import jobs_for
+
+    rows = []
+    report = {"arch": "ssl-paper", "mode": "dry", "kernels": []}
+    # persist=False: a reporting run must not mutate the machine's dispatch
+    # cache — pre-warming is the CLI pre-tuner's job, not the benchmark's.
+    kw = dict(mode="dry", max_candidates=6, persist=False)
+    for n, d in _shapes():
+        plan_result, jobs = jobs_for(n, d, **kw)
+        results = [plan_result]
+        for kernel, shape in jobs:
+            results.append(tune.tune(kernel, shape, **kw))
+        for res in results:
+            default = res.candidate_for(res.default)
+            tuned = res.candidate_for(res.best)
+            assert tuned.cost["flops"] <= default.cost["flops"]
+            assert tuned.cost["hbm_bytes"] <= default.cost["hbm_bytes"]
+            name = f"tune/{res.kernel}/{'x'.join(map(str, res.shape))}"
+            report["kernels"].append(
+                {
+                    "kernel": res.kernel,
+                    "shape": list(res.shape),
+                    "backend": res.backend,
+                    "default": {"config": default.config, "cost": default.cost},
+                    "tuned": {"config": tuned.config, "cost": tuned.cost},
+                    "flops_ratio": tuned.cost["flops"] / max(default.cost["flops"], 1.0),
+                    "bytes_ratio": tuned.cost["hbm_bytes"] / max(default.cost["hbm_bytes"], 1.0),
+                }
+            )
+            rows.append(
+                fmt_row(
+                    name,
+                    0.0,  # dry mode: ranking is compiled-cost, nothing is executed
+                    f"flops={tuned.cost['flops']:.3e};bytes={tuned.cost['hbm_bytes']:.3e};"
+                    f"default_flops={default.cost['flops']:.3e};"
+                    f"default_bytes={default.cost['hbm_bytes']:.3e}",
+                )
+            )
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    rows.append(f"# wrote {OUT_PATH} ({len(report['kernels'])} kernel shapes)")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -19,6 +19,7 @@ SUITES = {
     "equivalence": "benchmarks.bench_loss_equivalence",# kernel agreement
     "distributed": "benchmarks.bench_distributed",     # DESIGN §4 modes
     "roofline": "benchmarks.roofline",                 # §Roofline (from dryrun)
+    "tune": "benchmarks.bench_tune",                   # default-vs-tuned -> BENCH_tune.json
 }
 
 

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sumvec as sv
+from repro.tune import dispatch as tune_dispatch
 
 Array = jax.Array
 
@@ -65,6 +66,17 @@ def cross_correlation_matrix(z1: Array, z2: Array, scale: Optional[float] = None
 # ---------------------------------------------------------------------------
 
 
+def _resolve_impl(op: str, q: int, impl: Optional[str]) -> str:
+    """Shared q/impl validation + backend routing for r_sum / r_sum_grouped."""
+    if q not in (1, 2):
+        raise ValueError(f"q must be 1 or 2, got {q!r}")
+    if impl is None:
+        impl = tune_dispatch.best_impl(op)
+    if impl not in ("jnp", "pallas"):
+        raise ValueError(f"impl must be 'jnp' or 'pallas', got {impl!r}")
+    return impl
+
+
 def r_sum_from_sumvec(svec: Array, q: int) -> Array:
     """Eq. (6) given a precomputed summary vector (drops component 0)."""
     tail = svec[..., 1:]
@@ -73,14 +85,28 @@ def r_sum_from_sumvec(svec: Array, q: int) -> Array:
     return jnp.sum(tail**2)
 
 
-def r_sum(z1: Array, z2: Array, *, q: int = 2, scale: Optional[float] = None) -> Array:
+def r_sum(
+    z1: Array,
+    z2: Array,
+    *,
+    q: int = 2,
+    scale: Optional[float] = None,
+    impl: Optional[str] = None,
+) -> Array:
     """Eq. (6) computed via FFT directly from embeddings.
 
     ``z1, z2`` : (n, d) standardized (BT-style) or centered (VICReg-style,
     with z1 is z2) views. ``scale``: normalizer s of C (n or n-1).
+    ``impl``: None consults ``repro.tune`` (jnp FFT off-TPU, Pallas four-step
+    on TPU); "jnp" / "pallas" pin the route.
     """
     d = z1.shape[-1]
     s = 1.0 if scale is None else float(scale)
+    impl = _resolve_impl("r_sum", q, impl)
+    if impl == "pallas":
+        from repro.kernels.sumvec_fft import ops as fops
+
+        return fops.r_sum_fourstep(z1, z2, q=q, scale=s)
     if q == 2:
         # Parseval path — no inverse FFT (beyond-paper optimization).
         g = sv.frequency_accumulator(z1, z2) / s
@@ -97,15 +123,24 @@ def r_sum_grouped(
     *,
     q: int = 2,
     scale: Optional[float] = None,
+    impl: Optional[str] = None,
 ) -> Array:
     """Eq. (13): grouped summary regularizer with block size b.
 
     Diagonal blocks drop their component 0 (the trace entries of C);
     off-diagonal blocks keep all b components (they contain only
-    off-diagonal elements of C).
+    off-diagonal elements of C).  ``impl`` as in :func:`r_sum`.
     """
     b = int(block_size)
     s = 1.0 if scale is None else float(scale)
+    impl = _resolve_impl("r_sum_grouped", q, impl)
+    # b > d means "pad d up to b" here (matching the matrix oracle), but the
+    # Pallas kernel clamps b to d — route the degenerate case through jnp on
+    # every backend so the loss value never depends on hardware.
+    if impl == "pallas" and b <= z1.shape[-1]:
+        from repro.kernels.grouped_sumvec import ops as gops
+
+        return gops.r_sum_kernel(z1, z2, block_size=b, q=q, scale=s)
     g = sv.grouped_frequency_accumulator(z1, z2, b) / s  # (nb, nb, nf)
     nb = g.shape[0]
     eye = jnp.eye(nb, dtype=jnp.float32)

@@ -29,10 +29,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.pallas_utils import INTERPRET, LANE, SUBLANE, next_multiple, pad_axis
-
-DEFAULT_TM = 128
-DEFAULT_TN = 128
-DEFAULT_TK = 128
+from repro.tune.dispatch import best_config
 
 
 # ---------------------------------------------------------------------------
@@ -50,10 +47,15 @@ def _mm_kernel(a_ref, b_ref, o_ref):
     o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
 
 
-def _pmatmul_raw(a, b, tm=DEFAULT_TM, tn=DEFAULT_TN, tk=DEFAULT_TK):
+def _pmatmul_raw(a, b, tm=None, tn=None, tk=None):
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
+    if tm is None or tn is None or tk is None:
+        cfg = best_config("pmatmul", (m, k, n), a.dtype)
+        tm = cfg["tm"] if tm is None else tm
+        tn = cfg["tn"] if tn is None else tn
+        tk = cfg["tk"] if tk is None else tk
     tm = min(tm, next_multiple(m, SUBLANE))
     tn = min(tn, next_multiple(n, LANE))
     tk = min(tk, next_multiple(k, LANE))
@@ -111,10 +113,14 @@ def _fo_kernel(a_ref, b_ref, o_ref):
     o_ref[0] += jnp.dot(a.T, b, preferred_element_type=jnp.float32)
 
 
-def _freq_outer_raw(a, b, tk=DEFAULT_TK, tn=DEFAULT_TN):
+def _freq_outer_raw(a, b, tk=None, tn=None):
     f, k, n = a.shape
     fb, kb, nb = b.shape
     assert (f, k) == (fb, kb), (a.shape, b.shape)
+    if tk is None or tn is None:
+        cfg = best_config("freq_outer", (f, k, max(n, nb)), a.dtype)
+        tk = cfg["tk"] if tk is None else tk
+        tn = cfg["tn"] if tn is None else tn
     npad = next_multiple(max(n, nb), LANE)
     tn = min(tn, npad)
     tk = min(tk, next_multiple(k, SUBLANE))
@@ -145,10 +151,12 @@ def _fm_kernel(a_ref, m_ref, o_ref):
     o_ref[0] = jnp.dot(a_ref[0], m_ref[0], preferred_element_type=jnp.float32)
 
 
-def _freq_mat_raw(a, m, tk=DEFAULT_TK):
+def _freq_mat_raw(a, m, tk=None):
     f, k, n = a.shape
     fm, nm, n2 = m.shape
     assert f == fm and n == nm, (a.shape, m.shape)
+    if tk is None:
+        tk = best_config("freq_mat", (f, k, n, n2), a.dtype)["tk"]
     npad = next_multiple(n, LANE)
     n2pad = next_multiple(n2, LANE)
     tk = min(tk, next_multiple(k, SUBLANE))

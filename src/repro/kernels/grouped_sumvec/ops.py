@@ -23,8 +23,23 @@ import jax.numpy as jnp
 
 from repro.kernels.grouped_sumvec import kernel as K
 from repro.kernels.pallas_utils import dft_matrices, irfft_basis
+from repro.tune import space as tune_space
 
 Array = jax.Array
+
+
+def auto_block_size(d: int, prefer: int = 128) -> int:
+    """A tuned default block size b for width d: the largest legal candidate
+    <= ``prefer``.
+
+    The paper (Fig. 3) finds b = 128 is the accuracy sweet spot — also
+    exactly one MXU tile; widths below ``prefer`` get b = d (ungrouped,
+    Eq. 6).  Note b is part of the LOSS definition — this helper is for
+    call sites choosing a b (the CLI pre-tuner, configs), never silently
+    applied inside ``r_sum_kernel``.
+    """
+    legal = tune_space.grouped_block_size_candidates(d)
+    return max(b for b in legal if b <= prefer)
 
 
 def _blockify(z: Array, b: int) -> Array:

@@ -1,6 +1,8 @@
 from repro.kernels.sumvec_fft.ops import (
+    FFTPlan,
     r_sum_fourstep,
     sumvec_fourstep,
+    fft_plan,
     four_step_fft,
     four_step_ifft,
     frequency_accumulator_fourstep,

@@ -28,8 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.pallas_utils import INTERPRET, LANE, SUBLANE, next_multiple, pad_axis
-
-TM, TN, TK = 128, 128, 128
+from repro.tune.dispatch import best_config
 
 
 # ---------------------------------------------------------------------------
@@ -52,12 +51,17 @@ def _cmm_kernel(ar_ref, ai_ref, br_ref, bi_ref, cr_ref, ci_ref):
     ci_ref[...] += dot(ar, bi) + dot(ai, br)
 
 
-def _cmatmul_raw(ar, ai, br, bi):
+def _cmatmul_raw(ar, ai, br, bi, tm=None, tn=None, tk=None):
     m, kdim = ar.shape
     _, n = br.shape
-    tm = min(TM, next_multiple(m, SUBLANE))
-    tn = min(TN, next_multiple(n, LANE))
-    tk = min(TK, next_multiple(kdim, LANE))
+    if tm is None or tn is None or tk is None:
+        cfg = best_config("cmatmul", (m, kdim, n), ar.dtype)
+        tm = cfg["tm"] if tm is None else tm
+        tn = cfg["tn"] if tn is None else tn
+        tk = cfg["tk"] if tk is None else tk
+    tm = min(tm, next_multiple(m, SUBLANE))
+    tn = min(tn, next_multiple(n, LANE))
+    tk = min(tk, next_multiple(kdim, LANE))
     mp, kp, np_ = next_multiple(m, tm), next_multiple(kdim, tk), next_multiple(n, tn)
     pad = lambda x, s0, s1: pad_axis(pad_axis(x, 0, s0), 1, s1)
     ar, ai = pad(ar, mp, kp), pad(ai, mp, kp)
@@ -124,10 +128,12 @@ def _ctw_kernel(xr_ref, xi_ref, wr_ref, wi_ref, yr_ref, yi_ref):
     yi_ref[...] = xr * wi + xi * wr
 
 
-def _ctwiddle_raw(xr, xi, wr, wi):
+def _ctwiddle_raw(xr, xi, wr, wi, tn=None):
     n, d = xr.shape
     assert wr.shape == (d,), (xr.shape, wr.shape)
-    tn = min(TM, next_multiple(n, SUBLANE))
+    if tn is None:
+        tn = best_config("ctwiddle", (n, d), xr.dtype)["tn"]
+    tn = min(tn, next_multiple(n, SUBLANE))
     dp = next_multiple(d, LANE)
     np_ = next_multiple(n, tn)
     xr = pad_axis(pad_axis(xr, 0, np_), 1, dp)

@@ -13,10 +13,21 @@ The frequency accumulator G = sum_k conj(F1_k) o F2_k is computed in the
 (Parseval), which are layout-invariant, so no unscramble transpose is ever
 materialized.  For q = 1 an inverse four-step produces the time-domain
 summary vector.
+
+Factorization plans come from ``repro.tune`` (kernel ``sumvec_fft_plan``).
+For prime / near-prime d the balanced factorization degenerates toward
+(1, d) — a full O(d^2) DFT with a d x d basis.  The tuned fallback zero-pads
+the feature axis to a highly composite dp >= 2d - 1: at that length the
+circular correlation of the padded rows equals the *linear* correlation (no
+wraparound), and the length-d circular summary vector is recovered exactly by
+folding lag -(d-t) onto lag t (``_fold_linear_to_circular``).  Padding is
+therefore semantics-preserving — unlike naive padding to an arbitrary dp,
+which would regroup the wrapped diagonals *before* the nonlinearity.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -24,19 +35,60 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.pallas_utils import full_dft_matrices
+from repro.kernels.pallas_utils import full_dft_matrices, pad_axis
 from repro.kernels.sumvec_fft import kernel as K
+from repro.tune.dispatch import best_config
+from repro.tune.space import balanced_factors
 
 Array = jax.Array
 
 
 def choose_factors(d: int) -> tuple[int, int]:
-    """d = d1 * d2 with d1 <= d2, d1 as close to sqrt(d) as possible."""
-    best = (1, d)
-    for d1 in range(1, int(np.sqrt(d)) + 1):
-        if d % d1 == 0:
-            best = (d1, d // d1)
-    return best
+    """d = d1 * d2 with d1 <= d2, d1 as close to sqrt(d) as possible.
+
+    Exact (never pads): callers that require a factorization of d itself
+    (e.g. the spectrum-layout tests) use this.  The regularizer entry points
+    use :func:`fft_plan`, which may instead pick a padded length when the
+    best exact factorization is pessimal (prime / near-prime d).
+    """
+    return balanced_factors(d)
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTPlan:
+    """A tuned four-step execution plan for logical DFT length d.
+
+    dp == d: exact in-place factorization d = d1 * d2.
+    dp > d : zero-pad to dp = d1 * d2 >= 2d - 1 and fold the linear
+             correlation back to d circular lags (exact; see module doc).
+
+    Frozen + hashable so it can ride through jit static args.
+    """
+
+    d: int
+    dp: int
+    d1: int
+    d2: int
+
+    @property
+    def padded(self) -> bool:
+        return self.dp > self.d
+
+    def __post_init__(self):
+        # explicit raises, not asserts: a violated invariant means a silently
+        # WRONG loss (aliased fold), which must not survive python -O
+        if self.d1 * self.d2 != self.dp:
+            raise ValueError(f"FFTPlan: d1 * d2 != dp ({self.d1} * {self.d2} != {self.dp})")
+        if self.dp != self.d and self.dp < 2 * self.d - 1:
+            raise ValueError(
+                f"FFTPlan: padded dp={self.dp} < 2d-1={2 * self.d - 1} aliases the fold"
+            )
+
+
+def fft_plan(d: int) -> FFTPlan:
+    """The tuned plan for length d (override via tune.override("sumvec_fft_plan"))."""
+    cfg = best_config("sumvec_fft_plan", (d,))
+    return FFTPlan(d=d, dp=cfg["dp"], d1=cfg["d1"], d2=cfg["d2"])
 
 
 def _twiddle(d1: int, d2: int, sign: int) -> tuple[Array, Array]:
@@ -101,37 +153,85 @@ def frequency_accumulator_fourstep(z1: Array, z2: Array, d1: int, d2: int):
     return gr, gi
 
 
-@functools.partial(jax.jit, static_argnames=("q", "scale"))
-def r_sum_fourstep(
-    z1: Array, z2: Array, *, q: int = 2, scale: Optional[float] = None
-) -> Array:
-    """Ungrouped Eq. (6) through the four-step Pallas pipeline."""
-    n, d = z1.shape
-    d1, d2 = choose_factors(d)
-    s = 1.0 if scale is None else float(scale)
-    gr, gi = frequency_accumulator_fourstep(
-        z1.astype(jnp.float32), z2.astype(jnp.float32), d1, d2
-    )
-    gr, gi = gr / s, gi / s
-    if q == 2:
+def _fold_linear_to_circular(sv: Array, d: int) -> Array:
+    """Exact length-d circular summary vector from a length-dp (dp >= 2d-1)
+    linear-correlation output: sv_d[t] = lin[t] + lin[-(d-t)], where lag -s
+    sits at index dp - s of the padded circular output."""
+    dp = sv.shape[-1]
+    if dp == d:
+        return sv
+    head = sv[..., :d]
+    neg = sv[..., dp - d + 1 :]  # lags -(d-1) .. -1
+    zero = jnp.zeros(sv.shape[:-1] + (1,), sv.dtype)
+    return head + jnp.concatenate([zero, neg], axis=-1)
+
+
+def _sumvec_impl(z1: Array, z2: Array, s: float, plan: FFTPlan) -> Array:
+    """Length-d time-domain summary vector through the (possibly padded)
+    four-step pipeline. Inputs (n, d) float32."""
+    zp1 = pad_axis(z1, 1, plan.dp)
+    zp2 = pad_axis(z2, 1, plan.dp)
+    gr, gi = frequency_accumulator_fourstep(zp1, zp2, plan.d1, plan.d2)
+    sv = four_step_ifft(gr, gi, plan.d1, plan.d2).reshape(plan.dp)
+    return _fold_linear_to_circular(sv, plan.d) / s
+
+
+def _r_sum_impl(z1: Array, z2: Array, q: int, s: float, plan: FFTPlan) -> Array:
+    z1 = z1.astype(jnp.float32)
+    z2 = z2.astype(jnp.float32)
+    if q == 2 and not plan.padded:
         # Full-spectrum Parseval: sum_t sv[t]^2 = (1/d) sum_f |G_f|^2,
-        # sv[0] = (1/d) sum_f Re G_f — layout invariant.
-        sq = jnp.sum(gr**2 + gi**2) / d
-        s0 = jnp.sum(gr) / d
+        # sv[0] = (1/d) sum_f Re G_f — layout invariant, no inverse FFT.
+        gr, gi = frequency_accumulator_fourstep(z1, z2, plan.d1, plan.d2)
+        gr, gi = gr / s, gi / s
+        sq = jnp.sum(gr**2 + gi**2) / plan.d
+        s0 = jnp.sum(gr) / plan.d
         return sq - s0**2
-    sv = four_step_ifft(gr, gi, d1, d2)  # (1?, d) natural order
-    sv = sv.reshape(d)
+    # padded plans fold in the time domain (Parseval at dp would regroup the
+    # wrapped diagonals); q = 1 needs the time domain regardless.
+    sv = _sumvec_impl(z1, z2, s, plan)
+    if q == 2:
+        return jnp.sum(sv**2) - sv[0] ** 2
     return jnp.sum(jnp.abs(sv[1:]))
 
 
-def sumvec_fourstep(z1: Array, z2: Array, scale: Optional[float] = None) -> Array:
+@functools.partial(jax.jit, static_argnames=("q", "scale", "plan"))
+def r_sum_fourstep(
+    z1: Array,
+    z2: Array,
+    *,
+    q: int = 2,
+    scale: Optional[float] = None,
+    plan: Optional[FFTPlan] = None,
+) -> Array:
+    """Ungrouped Eq. (6) through the four-step Pallas pipeline.
+
+    ``plan=None`` consults the tuner; pass an explicit :class:`FFTPlan` to
+    pin the factorization (it is hashable, so it jit-caches cleanly).
+    """
+    d = z1.shape[-1]
+    if plan is None:
+        plan = fft_plan(d)
+    if plan.d != d:
+        # raise, don't assert: a stale plan under python -O would fold to
+        # plan.d and return a silently wrong loss
+        raise ValueError(f"plan built for d={plan.d}, inputs have d={d}")
+    s = 1.0 if scale is None else float(scale)
+    return _r_sum_impl(z1, z2, q, s, plan)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "plan"))
+def sumvec_fourstep(
+    z1: Array,
+    z2: Array,
+    scale: Optional[float] = None,
+    plan: Optional[FFTPlan] = None,
+) -> Array:
     """Time-domain sumvec via four-step fwd+inv (kernel analogue of Eq. 12)."""
-    n, d = z1.shape
-    d1, d2 = choose_factors(d)
-    gr, gi = frequency_accumulator_fourstep(
-        z1.astype(jnp.float32), z2.astype(jnp.float32), d1, d2
-    )
-    sv = four_step_ifft(gr, gi, d1, d2).reshape(d)
-    if scale is not None:
-        sv = sv / scale
-    return sv
+    d = z1.shape[-1]
+    if plan is None:
+        plan = fft_plan(d)
+    if plan.d != d:
+        raise ValueError(f"plan built for d={plan.d}, inputs have d={d}")
+    s = 1.0 if scale is None else float(scale)
+    return _sumvec_impl(z1.astype(jnp.float32), z2.astype(jnp.float32), s, plan)

@@ -18,9 +18,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pallas_utils import INTERPRET, LANE, SUBLANE, next_multiple, pad_axis
-
-TILE_D = 256
-TILE_N = 128
+from repro.tune.dispatch import best_config
 
 
 def _xcorr_kernel(z1_ref, z2_ref, out_ref, acc_ref):
@@ -52,9 +50,17 @@ def _xcorr_kernel(z1_ref, z2_ref, out_ref, acc_ref):
         out_ref[0, 0] += off_sum
 
 
-def off_diagonal_sq_sum_raw(z1, z2, tile_d: int = TILE_D, tile_n: int = TILE_N):
-    """sum_{i != j} (Z1^T Z2)_{ij}^2 without materializing the d x d matrix."""
+def off_diagonal_sq_sum_raw(z1, z2, tile_d=None, tile_n=None):
+    """sum_{i != j} (Z1^T Z2)_{ij}^2 without materializing the d x d matrix.
+
+    Tiling comes from ``repro.tune`` unless pinned explicitly via the
+    ``tile_d`` / ``tile_n`` arguments (tests, benchmarks, the tuner itself).
+    """
     n, d = z1.shape
+    if tile_d is None or tile_n is None:
+        cfg = best_config("xcorr_offdiag", (n, d), z1.dtype)
+        tile_d = cfg["tile_d"] if tile_d is None else tile_d
+        tile_n = cfg["tile_n"] if tile_n is None else tile_n
     td = min(tile_d, next_multiple(d, LANE))
     tn = min(tile_n, next_multiple(n, SUBLANE))
     dp = next_multiple(d, td)

@@ -1,0 +1,60 @@
+"""repro.tune — autotuning + kernel-config dispatch for the Pallas kernels.
+
+Layers (see the module docstrings for detail):
+
+  * ``space``    — legal candidate enumeration per kernel (lane/sublane
+                   alignment, VMEM budget, four-step factorization plans),
+  * ``cost``     — analytic / compiled-HLO / measured cost tiers,
+  * ``cache``    — persistent JSON cache keyed by (kernel, padded shape,
+                   dtype) per backend, schema-versioned,
+  * ``dispatch`` — ``best_config`` consulted by every kernel wrapper
+                   (override > memo > disk cache > analytic search),
+  * ``tuner``    — offline search (``tune``), used by the CLI pre-tuner
+                   ``python -m repro.tune.cli`` and benchmarks.
+"""
+
+from repro.tune.dispatch import (
+    best_config,
+    best_impl,
+    canonical_shape,
+    clear_memory_cache,
+    clear_override,
+    override,
+    set_override,
+)
+from repro.tune.space import (
+    KERNELS,
+    VMEM_BUDGET_BYTES,
+    candidates,
+    default_config,
+    grouped_block_size_candidates,
+    is_legal,
+    vmem_bytes,
+)
+
+
+def tune(*args, **kwargs):
+    """Lazy proxy for :func:`repro.tune.tuner.tune` (keeps kernel imports
+    out of this package's import time — kernels themselves import us)."""
+    from repro.tune import tuner
+
+    return tuner.tune(*args, **kwargs)
+
+
+__all__ = [
+    "best_config",
+    "best_impl",
+    "canonical_shape",
+    "candidates",
+    "clear_memory_cache",
+    "clear_override",
+    "default_config",
+    "grouped_block_size_candidates",
+    "is_legal",
+    "KERNELS",
+    "override",
+    "set_override",
+    "tune",
+    "vmem_bytes",
+    "VMEM_BUDGET_BYTES",
+]

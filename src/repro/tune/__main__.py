@@ -1,0 +1,7 @@
+"""``python -m repro.tune`` == ``python -m repro.tune.cli``."""
+
+import sys
+
+from repro.tune.cli import main
+
+sys.exit(main())

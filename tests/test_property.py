@@ -1,8 +1,15 @@
-"""Hypothesis property tests for the system's invariants."""
+"""Hypothesis property tests for the system's invariants.
+
+hypothesis is an optional dev dependency — the module skips cleanly (instead
+of crashing collection) when it is not installed.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency: pip install hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import losses as L
