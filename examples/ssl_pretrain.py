@@ -10,6 +10,10 @@ seconds-scale run.
     PYTHONPATH=src python examples/ssl_pretrain.py \
         --steps 300 --ckpt-dir /tmp/ssl_ckpt          # ~100M params
     # kill it mid-run and re-run: it resumes from the newest checkpoint.
+    # distributed (shard_map over all local devices; see README):
+    PYTHONPATH=src python examples/ssl_pretrain.py --tiny --distributed global
+    PYTHONPATH=src python examples/ssl_pretrain.py --tiny --distributed tp \
+        --model-parallel 2
 """
 
 import argparse
@@ -20,9 +24,18 @@ import jax.numpy as jnp
 
 from repro.core.losses import DecorrConfig, normalized_bt_regularizer
 from repro.data import SSLDataConfig, ssl_batch
+from repro.decorr import warmup_tune_cache
+from repro.launch.mesh import make_mesh_for_devices
 from repro.optim import lars, warmup_cosine
 from repro.train import LoopConfig, create_train_state, run_training
-from repro.train.ssl import SSLModelConfig, embed, init_ssl_params, make_ssl_train_step
+from repro.train.ssl import (
+    SSLModelConfig,
+    embed,
+    init_ssl_params,
+    make_sharded_ssl_train_step,
+    make_ssl_train_step,
+    shard_ssl_batch,
+)
 
 
 def main():
@@ -36,6 +49,22 @@ def main():
     ap.add_argument("--no-permute", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--preempt-flag", default=None)
+    ap.add_argument(
+        "--distributed",
+        default=None,
+        choices=["local", "global", "tp"],
+        help="run the step under shard_map over all local devices "
+        "(decorr engine mode; default: single-device step)",
+    )
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="model-axis size for --distributed tp")
+    ap.add_argument(
+        "--pretune",
+        default="analytic",
+        choices=["off", "analytic", "dry", "measure"],
+        help="warm the repro.tune cache for the shard-local decorr shapes "
+        "before the first step is traced",
+    )
     args = ap.parse_args()
 
     if args.tiny:
@@ -65,17 +94,38 @@ def main():
         style="bt", reg=args.reg, q=2,
         block_size=args.block_size if args.reg == "sum" else None,
         lam=2.0**-10, permute=not args.no_permute,
+        distributed=args.distributed or "local",
     )
     params = init_ssl_params(jax.random.PRNGKey(0), model)
     opt = lars(weight_decay=1e-4)  # the paper's optimizer
     state = create_train_state(params, opt)
     sched = warmup_cosine(0.2, max(args.steps // 10, 1), args.steps)
-    step_fn, _ = make_ssl_train_step(model, loss_cfg, opt, sched)
+
+    mesh = None
+    if args.distributed is not None:
+        mesh = make_mesh_for_devices(len(jax.devices()), args.model_parallel)
+        print(f"[ssl_pretrain] mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+              f"mode={args.distributed}")
+        step_fn, _ = make_sharded_ssl_train_step(model, loss_cfg, opt, sched, mesh)
+    else:
+        step_fn, _ = make_ssl_train_step(model, loss_cfg, opt, sched)
+
+    if args.pretune != "off":
+        # warm the kernel-config cache for the SHARD-LOCAL shapes so the
+        # first jitted step doesn't pay the search (ROADMAP open item).
+        t_tune = time.time()
+        n_jobs = len(warmup_tune_cache(
+            data.batch, model.projector_widths[-1], loss_cfg,
+            mesh=mesh, mode=args.pretune,
+        ))
+        print(f"[ssl_pretrain] pre-tuned {n_jobs} kernel shapes "
+              f"({args.pretune}, {time.time()-t_tune:.1f}s)")
     step_fn = jax.jit(step_fn)
 
     def batch_fn(step):
         v1, v2 = ssl_batch(data, step)
-        return {"view1": jnp.asarray(v1), "view2": jnp.asarray(v2)}
+        b = {"view1": jnp.asarray(v1), "view2": jnp.asarray(v2)}
+        return shard_ssl_batch(b, mesh) if mesh is not None else b
 
     t0 = time.time()
 

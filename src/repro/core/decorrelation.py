@@ -21,8 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import losses as losses_lib
-from repro.core import permutation as perm_lib
-from repro.core import regularizers as regs
+from repro.decorr import engine as decorr_engine
 
 Array = jax.Array
 
@@ -77,15 +76,16 @@ def lm_decorrelation_loss(
 
     z = subsample_tokens(hidden, cfg.tokens_per_seq)
     n, d = z.shape
-    zc = losses_lib.center(z)
+    mode = decorr_engine.effective_mode(cfg.decorr)
+    zc = decorr_engine.center(z, cfg.decorr, mode)
 
-    var = regs.r_var_from_embeddings(zc + 0.0, cfg.decorr.gamma)
+    var = decorr_engine.variance_hinge(z, cfg.decorr, mode)
 
-    if cfg.decorr.permute and perm_key is not None and cfg.decorr.reg == "sum":
-        zc, _ = perm_lib.permute_views(perm_key, zc)
-
+    # The engine owns permutation, mode and impl routing; ddof=1 makes the
+    # 'global' mode normalize by the exact effective-batch n - 1, matching
+    # the variance hinge above.
     scale = float(max(n - 1, 1))
-    reg = losses_lib._decorrelating_term(zc, zc, cfg.decorr, scale=scale)
+    reg = decorr_engine.regularizer(zc, zc, cfg.decorr, scale, perm_key=perm_key, ddof=1)
 
     aux = (cfg.mu / d) * var + (cfg.nu / d) * reg
     return aux, {

@@ -1,146 +1,39 @@
-"""Distributed decorrelation (DESIGN.md §4).
+"""Distributed decorrelation — compatibility shim.
 
-Three modes for computing R_sum under SPMD:
-
-``local``  (paper-faithful): every data shard computes the regularizer on its
-    local batch slice; cross-device traffic is only the usual gradient
-    all-reduce.  This reproduces the paper's DDP implementation, which states
-    "we do not conduct collective operations" in the loss.
-
-``global`` (beyond-paper): the frequency accumulator
-    ``G = sum_k conj(F a_k) o F b_k`` is an *additive* statistic of the batch,
-    so a single psum of d complex numbers (64 KiB at d = 8192) turns the
-    local regularizer into the exact global-batch regularizer.  The paper's
-    DDP run cannot see cross-shard correlations; this mode can, for free.
-
-``tp``     (feature-sharded): when the projector output dimension d itself is
-    tensor-parallel over the ``model`` axis, the FFT spans shards.  We
-    transpose batch<->feature with one all_to_all (each of the P model shards
-    ends up with n/P full-length feature vectors), run shard-local FFTs, and
-    psum the accumulator.  Communication: n*d/P elements per shard instead of
-    an all-gather's n*d.
-
-All functions here are meant to be called inside ``shard_map`` (or jit with
-explicit axis names via ``jax.lax`` collectives).
+The mode primitives moved to ``repro.decorr.modes`` when the decorrelation
+engine (``repro.decorr``) consolidated mode/impl/normalization routing into
+one dispatch layer; import from there in new code.  This module re-exports
+the historical surface so existing call sites keep working.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from repro.decorr.modes import (  # noqa: F401
+    all_to_all_features,
+    frequency_accumulator,
+    grouped_reg_from_freq,
+    psum_if,
+    r_off_global,
+    r_sum_from_psummed,
+    r_sum_global,
+    r_sum_single_device,
+    r_sum_tp,
+    reg_from_freq,
+)
 
-import jax
-import jax.numpy as jnp
+# Historical private names, kept for any external pin.
+_reg_from_freq = reg_from_freq
+_grouped_reg_from_freq = grouped_reg_from_freq
 
-from repro.core import sumvec as sv
-
-Array = jax.Array
-
-
-def _axis_size(axis_name) -> Array:
-    return jax.lax.psum(jnp.asarray(1.0, jnp.float32), axis_name)
-
-
-def _reg_from_freq(g: Array, d: int, q: int) -> Array:
-    """R_sum from an (already normalized) frequency accumulator."""
-    if q == 2:
-        sq, s0 = sv.sq_sum_and_zeroth_from_freq(g, d)
-        return sq - s0**2
-    svec = jnp.fft.irfft(g, n=d, axis=-1)
-    return jnp.sum(jnp.abs(svec[..., 1:]))
-
-
-def _grouped_reg_from_freq(g: Array, b: int, q: int) -> Array:
-    nb = g.shape[0]
-    eye = jnp.eye(nb, dtype=jnp.float32)
-    if q == 2:
-        sq, s0 = sv.sq_sum_and_zeroth_from_freq(g, b)
-        return jnp.sum(sq) - jnp.sum(eye * s0**2)
-    svec = jnp.fft.irfft(g, n=b, axis=-1)
-    full = jnp.sum(jnp.abs(svec), axis=-1)
-    return jnp.sum(full) - jnp.sum(eye * jnp.abs(svec[..., 0]))
-
-
-def r_sum_global(
-    z1: Array,
-    z2: Array,
-    *,
-    axis_name,
-    q: int = 2,
-    block_size: Optional[int] = None,
-    scale: Optional[float] = None,
-) -> Array:
-    """Exact global-batch R_sum with one psum of the frequency accumulator.
-
-    ``z1, z2``: the *local* (n_local, d) shard of the standardized/centered
-    views.  ``scale``: the *local* normalizer (n_local or n_local - 1); it is
-    multiplied by the axis size so the result matches a single-device run on
-    the concatenated batch.
-    """
-    d = z1.shape[-1]
-    p = _axis_size(axis_name)
-    s = (1.0 if scale is None else float(scale)) * p
-    if block_size is None or block_size >= d:
-        g = sv.frequency_accumulator(z1, z2)
-        g = jax.lax.psum(g, axis_name) / s.astype(g.dtype)
-        return _reg_from_freq(g, d, q)
-    g = sv.grouped_frequency_accumulator(z1, z2, block_size)
-    g = jax.lax.psum(g, axis_name) / s.astype(g.dtype)
-    return _grouped_reg_from_freq(g, int(block_size), q)
-
-
-def r_sum_tp(
-    z1: Array,
-    z2: Array,
-    *,
-    model_axis,
-    batch_axis=None,
-    q: int = 2,
-    block_size: Optional[int] = None,
-    scale: Optional[float] = None,
-) -> Array:
-    """R_sum when the feature dim is sharded over ``model_axis``.
-
-    Inside shard_map each shard holds (n, d_local) with d = P * d_local and
-    features laid out contiguously by shard index.  One tiled all_to_all
-    converts to (n / P, d) full-feature rows, then the computation proceeds
-    as in ``global`` mode with the accumulator psum'd over the model axis
-    (batch chunks) and, if given, the batch axis (data parallel shards).
-    """
-    n = z1.shape[0]
-    p = jax.lax.psum(1, model_axis)  # static int under shard_map
-
-    def to_full_features(z):
-        # (n, d_local) -> (n/P, d): split batch, exchange, concat features.
-        return jax.lax.all_to_all(z, model_axis, split_axis=0, concat_axis=1, tiled=True)
-
-    z1f = to_full_features(z1.astype(jnp.float32))
-    z2f = to_full_features(z2.astype(jnp.float32))
-    d = z1f.shape[-1]
-
-    if block_size is None or block_size >= d:
-        g = sv.frequency_accumulator(z1f, z2f)
-    else:
-        g = sv.grouped_frequency_accumulator(z1f, z2f, block_size)
-
-    g = jax.lax.psum(g, model_axis)
-    s = 1.0 if scale is None else float(scale)
-    if batch_axis is not None:
-        g = jax.lax.psum(g, batch_axis)
-        s = s * jax.lax.psum(1, batch_axis)
-    g = g / jnp.asarray(s, g.dtype)
-
-    if block_size is None or block_size >= d:
-        return _reg_from_freq(g, d, q)
-    return _grouped_reg_from_freq(g, int(block_size), q)
-
-
-# ---------------------------------------------------------------------------
-# Reference: what a single device computes on the concatenated global batch.
-# Used by tests to check the distributed modes bit-for-bit (up to fp assoc).
-# ---------------------------------------------------------------------------
-
-
-def r_sum_single_device(z1, z2, *, q=2, block_size=None, scale=None):
-    from repro.core import regularizers as regs
-
-    return regs.r_sum_auto(z1, z2, q=q, block_size=block_size, scale=scale)
+__all__ = [
+    "all_to_all_features",
+    "frequency_accumulator",
+    "grouped_reg_from_freq",
+    "psum_if",
+    "r_off_global",
+    "r_sum_from_psummed",
+    "r_sum_global",
+    "r_sum_single_device",
+    "r_sum_tp",
+    "reg_from_freq",
+]

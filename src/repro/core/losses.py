@@ -1,67 +1,27 @@
-"""Full SSL loss functions (paper §3, §4.6).
+"""Full SSL loss functions (paper §3, §4.6) — compatibility shim.
 
 * ``barlow_twins_loss``   — Eq. (14): invariance-on-the-diagonal + lambda * R
 * ``vicreg_loss``         — Eq. (15): alpha*MSE + mu*R_var + nu*R
 with R in {R_off (baseline), R_sum, R_sum^(b)} selected by ``DecorrConfig``.
 
-Normalization follows the paper's listings: BT-style standardizes both views
-and divides the correlation statistics by n; VICReg-style centers each view
-and divides by (n - 1).
-
-The diagonal (invariance) terms never need the d x d matrix:
-``C_ii = (1/n) sum_k a_ki b_ki`` is an O(n d) columnwise reduction.
+All routing (normalization moments, permutation, distribution mode, jnp vs
+Pallas impl, scale bookkeeping) lives in ``repro.decorr.engine``; this module
+only preserves the historical import surface plus the paper's evaluation
+metrics (Eq. 16 / 17), which are single-device probes.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import permutation as perm_lib
 from repro.core import regularizers as regs
+from repro.decorr import engine as _engine
+from repro.decorr.config import DecorrConfig  # noqa: F401  (compat re-export)
 
 Array = jax.Array
-
-
-@dataclasses.dataclass(frozen=True)
-class DecorrConfig:
-    """Selects and parameterizes the decorrelating regularizer.
-
-    style:       'bt' (cross-correlation, Eq. 14) | 'vic' (covariance, Eq. 15)
-    reg:         'off' (baseline R_off) | 'sum' (proposed R_sum / R_sum^(b))
-    block_size:  None => no grouping (b = d); else b (paper's best: 128)
-    q:           1 | 2 (paper Table 11: q=2 for BT-style, q=1 for VICReg-style)
-    permute:     feature permutation each step (essential; paper Table 5)
-    lam:         BT lambda
-    alpha/mu/nu: VICReg coefficients;  gamma: target std
-    distributed: 'local' | 'global' | 'tp'  (see core/distributed.py)
-    use_kernel:  route the regularizer through the Pallas kernels
-    """
-
-    style: str = "bt"
-    reg: str = "sum"
-    block_size: Optional[int] = None
-    q: int = 2
-    permute: bool = True
-    lam: float = 2.0**-10
-    alpha: float = 25.0
-    mu: float = 25.0
-    nu: float = 1.0
-    gamma: float = 1.0
-    eps: float = 1e-5
-    distributed: str = "local"
-    axis_name: Optional[str] = None
-    use_kernel: bool = False
-
-    def validate(self) -> "DecorrConfig":
-        assert self.style in ("bt", "vic"), self.style
-        assert self.reg in ("off", "sum"), self.reg
-        assert self.q in (1, 2), self.q
-        assert self.distributed in ("local", "global", "tp"), self.distributed
-        return self
 
 
 def standardize(z: Array, eps: float = 1e-5) -> Array:
@@ -78,47 +38,6 @@ def center(z: Array) -> Array:
     return z - jnp.mean(z, axis=0, keepdims=True)
 
 
-# ---------------------------------------------------------------------------
-# Regularizer dispatch
-# ---------------------------------------------------------------------------
-
-
-def _psum_if(x: Array, cfg: DecorrConfig) -> Array:
-    if cfg.distributed == "global" and cfg.axis_name is not None:
-        return jax.lax.psum(x, cfg.axis_name)
-    return x
-
-
-def _decorrelating_term(z1: Array, z2: Array, cfg: DecorrConfig, scale: float) -> Array:
-    """R(C) with C = (1/scale) Z1^T Z2 — dispatches baseline / proposed /
-    kernel / distributed variants."""
-    if cfg.reg == "off":
-        if cfg.use_kernel:
-            from repro.kernels.xcorr_offdiag import ops as xops
-
-            return xops.off_diagonal_sq_sum(z1, z2, scale=scale)
-        c = regs.cross_correlation_matrix(z1, z2, scale=scale)
-        return regs.r_off(c)
-
-    # proposed R_sum / R_sum^(b)
-    if cfg.distributed == "global" and cfg.axis_name is not None:
-        from repro.core import distributed as dist
-
-        return dist.r_sum_global(
-            z1, z2, axis_name=cfg.axis_name, q=cfg.q, block_size=cfg.block_size, scale=scale
-        )
-    if cfg.use_kernel:
-        from repro.kernels.grouped_sumvec import ops as gops
-
-        return gops.r_sum_kernel(z1, z2, block_size=cfg.block_size, q=cfg.q, scale=scale)
-    return regs.r_sum_auto(z1, z2, q=cfg.q, block_size=cfg.block_size, scale=scale)
-
-
-# ---------------------------------------------------------------------------
-# Barlow Twins-style loss (Eq. 14)
-# ---------------------------------------------------------------------------
-
-
 def barlow_twins_loss(
     z1: Array,
     z2: Array,
@@ -126,36 +45,7 @@ def barlow_twins_loss(
     perm_key: Optional[Array] = None,
 ) -> tuple[Array, Dict[str, Array]]:
     """Eq. (14). Returns (loss, metrics). ``z1, z2``: raw (n, d) projections."""
-    cfg.validate()
-    n = z1.shape[0]
-    z1 = standardize(z1, cfg.eps)
-    z2 = standardize(z2, cfg.eps)
-    if cfg.permute and perm_key is not None and cfg.reg == "sum":
-        z1, z2 = perm_lib.permute_views(perm_key, z1, z2)
-
-    # Diagonal (invariance) term: C_ii in O(n d).  With 'global' mode the
-    # batch statistics are combined across shards (n -> global n).
-    cii_local = jnp.sum(z1 * z2, axis=0)
-    cii = _psum_if(cii_local, cfg)
-    n_eff = _psum_if(jnp.asarray(n, jnp.float32), cfg)
-    cii = cii / n_eff
-    invariance = jnp.sum((1.0 - cii) ** 2)
-
-    reg = _decorrelating_term(z1, z2, cfg, scale=float(n))
-    if cfg.distributed == "global" and cfg.axis_name is not None and cfg.reg == "off":
-        reg = jax.lax.pmean(reg, cfg.axis_name)
-
-    loss = invariance + cfg.lam * reg
-    return loss, {
-        "bt_invariance": invariance,
-        "bt_reg": reg,
-        "bt_loss": loss,
-    }
-
-
-# ---------------------------------------------------------------------------
-# VICReg-style loss (Eq. 15)
-# ---------------------------------------------------------------------------
+    return _engine.barlow_twins(z1, z2, cfg, perm_key)
 
 
 def vicreg_loss(
@@ -165,37 +55,7 @@ def vicreg_loss(
     perm_key: Optional[Array] = None,
 ) -> tuple[Array, Dict[str, Array]]:
     """Eq. (15). Returns (loss, metrics)."""
-    cfg.validate()
-    n, d = z1.shape
-    z1 = z1.astype(jnp.float32)
-    z2 = z2.astype(jnp.float32)
-
-    # invariance: before centering (paper Eq. 3 uses raw embeddings)
-    inv = jnp.mean(jnp.sum((z1 - z2) ** 2, axis=-1))
-
-    c1 = center(z1)
-    c2 = center(z2)
-    var1 = regs.r_var_from_embeddings(c1 + 0.0, cfg.gamma)
-    var2 = regs.r_var_from_embeddings(c2 + 0.0, cfg.gamma)
-
-    if cfg.permute and perm_key is not None and cfg.reg == "sum":
-        c1, c2 = perm_lib.permute_views(perm_key, c1, c2)
-
-    scale = float(max(n - 1, 1))
-    reg1 = _decorrelating_term(c1, c1, cfg, scale=scale)
-    reg2 = _decorrelating_term(c2, c2, cfg, scale=scale)
-
-    loss = (
-        cfg.alpha * inv
-        + (cfg.mu / d) * (var1 + var2)
-        + (cfg.nu / d) * (reg1 + reg2)
-    )
-    return loss, {
-        "vic_invariance": inv,
-        "vic_var": var1 + var2,
-        "vic_reg": reg1 + reg2,
-        "vic_loss": loss,
-    }
+    return _engine.vicreg(z1, z2, cfg, perm_key)
 
 
 def ssl_loss(
@@ -205,9 +65,7 @@ def ssl_loss(
     perm_key: Optional[Array] = None,
 ) -> tuple[Array, Dict[str, Array]]:
     """Dispatch on cfg.style."""
-    if cfg.style == "bt":
-        return barlow_twins_loss(z1, z2, cfg, perm_key)
-    return vicreg_loss(z1, z2, cfg, perm_key)
+    return _engine.apply(z1, z2, cfg, perm_key)
 
 
 # ---------------------------------------------------------------------------

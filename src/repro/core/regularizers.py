@@ -161,11 +161,16 @@ def r_sum_auto(
     q: int = 2,
     block_size: Optional[int] = None,
     scale: Optional[float] = None,
+    impl: Optional[str] = None,
 ) -> Array:
-    """Dispatch between grouped / ungrouped forms (b = None or b >= d ==> Eq. 6)."""
+    """Dispatch between grouped / ungrouped forms (b = None or b >= d ==> Eq. 6).
+
+    ``impl`` forwards to :func:`r_sum` / :func:`r_sum_grouped` (None consults
+    ``repro.tune``); the degenerate b <= 1 matrix route ignores it.
+    """
     d = z1.shape[-1]
     if block_size is None or block_size >= d:
-        return r_sum(z1, z2, q=q, scale=scale)
+        return r_sum(z1, z2, q=q, scale=scale, impl=impl)
     if block_size <= 1:
         # R_sum^(1) with q=2 is exactly R_off (paper §4.4); compute the
         # matrix route for fidelity at this degenerate setting.
@@ -174,7 +179,7 @@ def r_sum_auto(
             return r_off(c)
         off = jnp.sum(jnp.abs(c)) - jnp.sum(jnp.abs(jnp.diagonal(c)))
         return off
-    return r_sum_grouped(z1, z2, block_size, q=q, scale=scale)
+    return r_sum_grouped(z1, z2, block_size, q=q, scale=scale, impl=impl)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,38 @@
+"""repro.decorr — the sharding-aware decorrelation engine.
+
+One dispatch layer for everything decorrelation: normalization (local vs
+psum'd global moments), feature permutation, mode routing
+(``local | global | tp``), impl routing (jnp vs Pallas via ``repro.tune``)
+and scale bookkeeping.  ``core/losses.py`` and ``core/distributed.py`` are
+thin compatibility shims over this package.
+
+    from repro import decorr
+    loss, metrics = decorr.apply(z1, z2, decorr.DecorrConfig(style="bt"), key)
+"""
+
+from repro.decorr.config import DecorrConfig
+from repro.decorr.engine import (
+    apply,
+    barlow_twins,
+    center,
+    effective_mode,
+    regularizer,
+    standardize,
+    variance_hinge,
+    vicreg,
+)
+from repro.decorr.warmup import shard_local_shape, warmup_tune_cache
+
+__all__ = [
+    "DecorrConfig",
+    "apply",
+    "barlow_twins",
+    "vicreg",
+    "regularizer",
+    "standardize",
+    "center",
+    "variance_hinge",
+    "effective_mode",
+    "shard_local_shape",
+    "warmup_tune_cache",
+]

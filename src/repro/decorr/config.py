@@ -1,0 +1,69 @@
+"""Decorrelation engine configuration.
+
+``DecorrConfig`` used to live in ``core/losses.py``; it moved here when the
+mode / impl / normalization routing was consolidated into ``repro.decorr``.
+``repro.core.losses.DecorrConfig`` remains as a compatibility re-export.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class DecorrConfig:
+    """Selects and parameterizes the decorrelating regularizer.
+
+    style:       'bt' (cross-correlation, Eq. 14) | 'vic' (covariance, Eq. 15)
+    reg:         'off' (baseline R_off) | 'sum' (proposed R_sum / R_sum^(b))
+    block_size:  None => no grouping (b = d); else b (paper's best: 128)
+    q:           1 | 2 (paper Table 11: q=2 for BT-style, q=1 for VICReg-style)
+    permute:     feature permutation each step (essential; paper Table 5)
+    lam:         BT lambda
+    alpha/mu/nu: VICReg coefficients;  gamma: target std
+    distributed: 'local' | 'global' | 'tp'  (see repro.decorr.modes)
+    axis_name:   mesh axis the BATCH is sharded over ('global'/'tp' modes);
+                 None means single-shard semantics even in 'global' mode
+    model_axis:  mesh axis the FEATURE dim is sharded over — required by the
+                 'tp' mode (the engine refuses to run 'tp' without it rather
+                 than silently computing the shard-local loss)
+    use_kernel:  pin the regularizer to the Pallas route (None-like default
+                 False lets ``repro.tune.best_impl`` pick per backend)
+    """
+
+    style: str = "bt"
+    reg: str = "sum"
+    block_size: Optional[int] = None
+    q: int = 2
+    permute: bool = True
+    lam: float = 2.0**-10
+    alpha: float = 25.0
+    mu: float = 25.0
+    nu: float = 1.0
+    gamma: float = 1.0
+    eps: float = 1e-5
+    distributed: str = "local"
+    axis_name: Optional[str] = None
+    model_axis: Optional[str] = None
+    use_kernel: bool = False
+
+    def validate(self) -> "DecorrConfig":
+        assert self.style in ("bt", "vic"), self.style
+        assert self.reg in ("off", "sum"), self.reg
+        assert self.q in (1, 2), self.q
+        assert self.distributed in ("local", "global", "tp"), self.distributed
+        return self
+
+    @property
+    def mode(self) -> str:
+        """The effective distribution mode.
+
+        'global' with no ``axis_name`` degrades to 'local' (a single-shard
+        run of a global config is exactly the local computation); 'tp' never
+        degrades — it raises in the engine when ``model_axis`` is missing,
+        because a silent fallback would compute the wrong (shard-local) loss.
+        """
+        if self.distributed == "global" and self.axis_name is None:
+            return "local"
+        return self.distributed

@@ -1,0 +1,85 @@
+"""Tune-cache warm-up for the decorrelation kernels (ROADMAP open item).
+
+Kernel wrappers resolve their tile configs when jit TRACES them, so any
+search cost not paid up front lands inside the first jitted training step.
+``warmup_tune_cache`` pre-tunes every kernel shape one regularizer call can
+reach — forward and backward — for the SHARD-LOCAL shapes the engine will
+actually dispatch under the given mesh/mode:
+
+  * ``local`` / ``global``: rows = n / data_parallel, width = d
+    (batch sharded, features full);
+  * ``tp``: rows = n / (data_parallel * model_parallel), width = d
+    (the regularizer runs on the all_to_all-transposed full-feature rows,
+    of which each model shard holds a 1/P slice of the local batch).
+
+Called at launcher startup (``launch/train.py``, ``examples/ssl_pretrain.py``)
+before the first step is traced.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from repro.decorr.config import DecorrConfig
+
+
+def shard_local_shape(
+    n: int,
+    d: int,
+    cfg: DecorrConfig,
+    *,
+    data_parallel: int = 1,
+    model_parallel: int = 1,
+) -> Tuple[int, int]:
+    """(rows, width) of the arrays the regularizer kernels see per shard."""
+    rows = max(n // max(data_parallel, 1), 1)
+    if cfg.distributed == "tp":
+        rows = max(rows // max(model_parallel, 1), 1)
+    return rows, d
+
+
+def mesh_parallelism(mesh, data_axis: str = "data", model_axis: str = "model") -> Tuple[int, int]:
+    """(data_parallel, model_parallel) sizes of a Mesh (1 for absent axes)."""
+    if mesh is None:
+        return 1, 1
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(shape.get(data_axis, 1)), int(shape.get(model_axis, 1))
+
+
+def warmup_tune_cache(
+    n: int,
+    d: int,
+    cfg: DecorrConfig,
+    *,
+    mesh=None,
+    data_parallel: Optional[int] = None,
+    model_parallel: Optional[int] = None,
+    mode: str = "analytic",
+    persist: bool = False,
+    verbose: bool = False,
+) -> List:
+    """Pre-tune the decorr kernel configs for the shard-local shapes.
+
+    ``mode``: 'analytic' (instant, the default for launcher startup), 'dry'
+    (compile-ranked) or 'measure' (wall-time ranked, real hardware).
+    ``persist=True`` additionally writes the winners to the JSON cache so the
+    *next* process also starts warm.  Returns the TuneResults.
+    """
+    from repro import tune
+    from repro.tune.cli import jobs_for
+
+    dp, mp = mesh_parallelism(mesh)
+    dp = data_parallel if data_parallel is not None else dp
+    mp = model_parallel if model_parallel is not None else mp
+    rows, width = shard_local_shape(n, d, cfg, data_parallel=dp, model_parallel=mp)
+
+    tune_kw = dict(mode=mode, persist=persist)
+    plan_result, jobs = jobs_for(rows, width, block_size=cfg.block_size, **tune_kw)
+    results = [plan_result]
+    for kernel, shape in jobs:
+        results.append(tune.tune(kernel, shape, **tune_kw))
+    if verbose:
+        for r in results:
+            moved = "tuned" if r.best != r.default else "kept default"
+            print(f"[decorr.warmup] {r.kernel} {'x'.join(map(str, r.shape))}: {moved} {r.best}")
+    return results

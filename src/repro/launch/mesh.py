@@ -4,25 +4,35 @@ Defined as FUNCTIONS (never module-level constants) so importing this module
 never touches jax device state — the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import and only then calls these.
+
+``AxisType`` landed after jax 0.4.37; on older runtimes the meshes are built
+without explicit axis types (the default is Auto there anyway).
 """
 
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.4.38
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def _make_mesh(shape, axes) -> Mesh:
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh_for_devices(n_devices: int, model_parallel: int = 1) -> Mesh:
     """Elastic helper: best (data, model) mesh for an arbitrary device count."""
     assert n_devices % model_parallel == 0
-    return jax.make_mesh(
-        (n_devices // model_parallel, model_parallel),
-        ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return _make_mesh((n_devices // model_parallel, model_parallel), ("data", "model"))

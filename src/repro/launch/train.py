@@ -40,6 +40,13 @@ def main():
     ap.add_argument("--ckpt-interval", type=int, default=50)
     ap.add_argument("--decorr", action="store_true", help="enable the paper's aux loss")
     ap.add_argument("--decorr-block", type=int, default=None)
+    ap.add_argument(
+        "--pretune",
+        default="analytic",
+        choices=["off", "analytic", "dry", "measure"],
+        help="warm the repro.tune cache for the decorr kernel shapes before "
+        "the first step is traced (ROADMAP: tune-cache warm-up hook)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -58,6 +65,18 @@ def main():
 
     print(f"[train] arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
           f"devices={len(jax.devices())}")
+    if args.decorr and args.pretune != "off":
+        from repro.decorr import warmup_tune_cache
+
+        # the aux-loss statistic has batch * tokens_per_seq rows of width
+        # d_model — pre-tune those shapes so the first jitted step is warm.
+        t_tune = time.time()
+        n_jobs = len(warmup_tune_cache(
+            args.batch * cfg.decorr.tokens_per_seq, cfg.d_model, cfg.decorr.decorr,
+            mode=args.pretune,
+        ))
+        print(f"[train] pre-tuned {n_jobs} decorr kernel shapes "
+              f"({args.pretune}, {time.time()-t_tune:.1f}s)")
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     opt = adamw()
     sched = warmup_cosine(args.lr, max(args.steps // 10, 1), args.steps)

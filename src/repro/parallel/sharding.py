@@ -38,6 +38,7 @@ DEFAULT_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
     "kv_heads": None,
     "head_dim": None,
     "ff": ("model",),
+    "feature": ("model",),  # TP projector output (decorr engine 'tp' mode)
     "experts": ("model",),
     "vocab": ("model",),
     "kv_seq": ("model",),

@@ -108,6 +108,27 @@ def main(argv=None) -> int:
         type=int,
         help="grouped-regularizer b your training config uses (default: paper's 128)",
     )
+    p.add_argument(
+        "--data-parallel",
+        type=int,
+        default=1,
+        help="batch-shard count: tune the SHARD-LOCAL rows (n / data_parallel) "
+        "the decorr engine dispatches inside shard_map",
+    )
+    p.add_argument(
+        "--model-parallel",
+        type=int,
+        default=1,
+        help="feature-shard count for the engine's tp mode: the regularizer "
+        "runs on the all_to_all-transposed (n / (dp * mp), d) rows",
+    )
+    p.add_argument(
+        "--distributed",
+        default=None,
+        choices=["local", "global", "tp"],
+        help="engine mode the shard-local shapes are for (default: tp when "
+        "--model-parallel > 1, else global — only tp divides rows by mp)",
+    )
     p.add_argument("--cache-dir", help="override the JSON cache directory (REPRO_TUNE_CACHE)")
     p.add_argument("--no-persist", action="store_true", help="search but do not write the cache")
     p.add_argument("-v", "--verbose", action="store_true")
@@ -128,6 +149,22 @@ def main(argv=None) -> int:
         shapes.extend(arch_shapes(args.arch))
     if not shapes:
         p.error("nothing to tune: pass --arch and/or --shape NxD")
+    if args.data_parallel > 1 or args.model_parallel > 1:
+        # mirror repro.decorr.warmup.shard_local_shape: model_parallel only
+        # shrinks the rows the kernels see in the engine's tp mode.
+        from repro.decorr import shard_local_shape
+        from repro.decorr.config import DecorrConfig
+
+        dist = args.distributed or ("tp" if args.model_parallel > 1 else "global")
+        cfg = DecorrConfig(distributed=dist)
+        shapes = [
+            shard_local_shape(
+                n, d, cfg,
+                data_parallel=args.data_parallel,
+                model_parallel=args.model_parallel,
+            )
+            for n, d in shapes
+        ]
 
     from repro import tune
     from repro.tune import cache as tcache
