@@ -1,0 +1,98 @@
+"""Serving policies: naive per-request vs dynamic micro-batching, on the
+ssl-paper reduced config.  Emits ``BENCH_serve.json`` (p50/p99 latency +
+throughput per policy, probe health, probe-vs-oracle agreement); CI gates
+that micro-batched throughput >= naive per-request throughput.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_row
+
+# ssl-paper reduced: paper-shaped siamese MLP, sized for a CPU bench run
+REDUCED = dict(input_dim=64, backbone=128, d=512)
+POLICY = dict(max_batch=64, max_wait_ms=2.0)
+N_REQUESTS = 512
+
+
+def run():
+    from repro.decorr import probe_metrics
+    from repro.decorr.config import DecorrConfig
+    from repro.serve import BucketPolicy, DecorrProbe, LoadConfig, ServeEngine, bucket_sizes
+    from repro.serve.loadgen import compare_policies
+    from repro.train.ssl import SSLModelConfig, init_ssl_params
+
+    model = SSLModelConfig(
+        input_dim=REDUCED["input_dim"],
+        backbone_widths=(REDUCED["backbone"],),
+        projector_widths=(REDUCED["d"], REDUCED["d"]),
+    )
+    params = init_ssl_params(jax.random.PRNGKey(0), model)
+    policy = BucketPolicy(**POLICY)
+    probe_cfg = DecorrConfig(style="vic", reg="sum", q=2)
+
+    load = LoadConfig(n_requests=N_REQUESTS, input_dim=REDUCED["input_dim"])
+    report = compare_policies(
+        lambda: ServeEngine(model, params, policy=policy),
+        load,
+        policy,
+        probe_fn=lambda: DecorrProbe(probe_cfg),
+    )
+
+    # probe-vs-oracle agreement on one served batch (acceptance criterion:
+    # the online probe equals the training-path computation to tolerance)
+    n = bucket_sizes(policy)[-1]
+    x = np.random.default_rng(1).standard_normal((n, REDUCED["input_dim"])).astype(np.float32)
+    engine = ServeEngine(model, params, policy=policy)
+    z = engine.encode(x)
+    key = jax.random.fold_in(jax.random.PRNGKey(0), jnp.uint32(0))
+    served = DecorrProbe(probe_cfg, sample_rows=n)
+    served.observe(np.asarray(z))
+    oracle = {k: float(v) for k, v in probe_metrics(z, cfg=probe_cfg, perm_key=key).items()}
+    probe_err = max(
+        abs(served.metrics()[f"decorr_{k}"] - v) / max(abs(v), 1e-6)
+        for k, v in oracle.items()
+    )
+
+    out = {
+        "config": {
+            **REDUCED,
+            **POLICY,
+            "n_requests": N_REQUESTS,
+            "buckets": list(bucket_sizes(policy)),
+        },
+        "naive": report["naive"],
+        "microbatch": report["microbatch"],
+        "probe": {
+            "oracle_rel_err": probe_err,
+            **{k: v for k, v in report["service_metrics"].items() if k.startswith("decorr_")},
+        },
+        "gate": report["gate"],
+    }
+    with open(os.path.join(os.getcwd(), "BENCH_serve.json"), "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True, default=float)
+
+    rows = []
+    for name in ("naive", "microbatch"):
+        r = report[name]
+        rows.append(fmt_row(
+            f"serve/{name}", r["p50_ms"] * 1e3,
+            f"p99_ms={r['p99_ms']:.2f};throughput_rps={r['throughput_rps']:.0f}",
+        ))
+    rows.append(fmt_row(
+        "serve/gate_microbatch_beats_naive", 0.0,
+        f"speedup={report['gate']['speedup']:.2f}x;"
+        f"ok={report['gate']['microbatch_beats_naive']};"
+        f"probe_oracle_rel_err={probe_err:.2e}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -20,6 +20,7 @@ SUITES = {
     "distributed": "benchmarks.bench_distributed",     # DESIGN §4 modes
     "roofline": "benchmarks.roofline",                 # §Roofline (from dryrun)
     "tune": "benchmarks.bench_tune",                   # default-vs-tuned -> BENCH_tune.json
+    "serve": "benchmarks.bench_serve",                 # serving policies -> BENCH_serve.json
 }
 
 

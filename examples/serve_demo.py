@@ -1,20 +1,20 @@
 """Batched serving demo: prefill a batch of prompts, then greedy-decode —
 exercises the same serve_step the decode_* dry-run shapes lower, on a
-reduced config.
+reduced config.  Prompt construction and the warmup-then-time loop are the
+shared ``repro.serve.common`` helpers (also used by launch/serve.py and the
+serve CLI).
 
     PYTHONPATH=src python examples/serve_demo.py --arch rwkv6-3b
     PYTHONPATH=src python examples/serve_demo.py --arch musicgen-large
 """
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import init_params
-from repro.train.serve import greedy_generate
+from repro.serve.common import make_prompt, timed_generate
 
 
 def main():
@@ -27,20 +27,15 @@ def main():
 
     cfg = get_config(args.arch).reduced()
     params = init_params(jax.random.PRNGKey(0), cfg)
-    key = jax.random.PRNGKey(1)
-    if cfg.frontend == "audio_codes":
-        prompt = jax.random.randint(key, (args.batch, args.prompt_len, cfg.n_codebooks), 0, cfg.vocab_size)
-    else:
-        prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    prompt = make_prompt(cfg, jax.random.PRNGKey(1), args.batch, args.prompt_len)
 
-    # warm (compile prefill + decode)
-    _ = greedy_generate(params, cfg, prompt, 2)
-    t0 = time.time()
-    out = greedy_generate(params, cfg, prompt, args.new_tokens)
-    dt = time.time() - t0
-    n = args.batch * args.new_tokens
+    # timed_generate warms (compiles prefill + decode at the same cache
+    # shapes) before timing — the old inline warmup recompiled on the real
+    # call because its max_len differed.
+    out, stats = timed_generate(params, cfg, prompt, args.new_tokens)
     print(f"[serve] {cfg.name} (reduced): batch={args.batch} prompt={args.prompt_len} "
-          f"-> {args.new_tokens} new tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")
+          f"-> {args.new_tokens} new tokens in {stats['seconds']:.2f}s "
+          f"({stats['tok_per_s']:.1f} tok/s)")
     print("sample:", out[0].tolist()[:12])
 
 

@@ -21,9 +21,11 @@ from repro.decorr.engine import (
     variance_hinge,
     vicreg,
 )
+from repro.decorr.probe import probe_metrics
 from repro.decorr.warmup import shard_local_shape, warmup_tune_cache
 
 __all__ = [
+    "probe_metrics",
     "DecorrConfig",
     "apply",
     "barlow_twins",

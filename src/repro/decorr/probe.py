@@ -1,0 +1,135 @@
+"""Inference-time decorrelation probes (ROADMAP: serve-path probes under the
+same engine).
+
+``probe_metrics`` measures the representation health of a *served* batch with
+exactly the training loss's semantics — same normalization (standardize for
+BT-style, center for VICReg-style; shard-local moments in ``local`` mode,
+psum'd global moments in ``global``/``tp`` mode), same feature permutation
+(the caller's ``perm_key``, identical on every shard), same scale bookkeeping
+(n for BT, n-1 for VICReg) — routed through ``repro.decorr.engine``.  Unlike
+the training path nothing here is wrapped in ``stop_gradient``: serving never
+differentiates through the probe, and keeping the graph clean lets the same
+function run under ``shard_map`` for sharded serving.
+
+Two health regularizers are reported:
+
+  * ``r_sum``  — the paper's O(n d log d) FFT statistic; always computed.
+  * ``r_off``  — the exact off-diagonal mass, O(n d^2); computed only when
+    affordable (``include_off``; auto = d <= 4096 and mode != 'tp').
+
+Serving typically has ONE embedding per request (no second view), so the
+default is the self-correlation probe ``z2 is z1`` — redundancy collapse
+shows up as off-diagonal mass of C(Z, Z) exactly as in VICReg's covariance
+term.  Pass a genuine second view to probe cross-correlation instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.decorr import engine, modes
+from repro.decorr.config import DecorrConfig
+
+Array = jax.Array
+
+# r_off materializes d x d — beyond this width the probe auto-drops it and
+# relies on the O(n d log d) r_sum statistic alone.
+OFF_DIAG_AUTO_LIMIT = 4096
+
+
+def _should_include_off(cfg: DecorrConfig, d: int, include_off: Optional[bool]) -> bool:
+    if include_off is not None:
+        return include_off
+    return d <= OFF_DIAG_AUTO_LIMIT and engine.effective_mode(cfg) != "tp"
+
+
+def probe_metrics(
+    z1: Array,
+    z2: Optional[Array] = None,
+    cfg: DecorrConfig = DecorrConfig(),
+    perm_key: Optional[Array] = None,
+    *,
+    include_off: Optional[bool] = None,
+) -> Dict[str, Array]:
+    """Decorrelation health of a served batch, training-oracle-exact.
+
+    Returns a flat dict of f32 scalars (shard_map-safe; replicated outputs):
+
+      r_sum        engine-routed R_sum at the training normalizer
+      r_sum_norm   r_sum / (d - 1)  (comparable across widths)
+      r_off        exact off-diagonal penalty (present when affordable)
+      r_off_norm   Eq. (16)-style r_off / (d (d - 1))
+      mean_abs     mean_j |mu_j| of the raw embeddings (effective batch)
+      std_err      mean_j |sigma_j - 1| (unit-variance drift)
+      diag_err     mean_j |1 - C_jj| cross-view alignment (z2 given only)
+      n_eff        effective batch the statistics were taken over
+    """
+    cfg.validate()
+    mode = engine.effective_mode(cfg)
+    same = z2 is None or z2 is z1
+    z1 = z1.astype(jnp.float32)
+    z2 = z1 if same else z2.astype(jnp.float32)
+    n_local, d_local = z1.shape
+    batch_axis = cfg.axis_name if mode in ("global", "tp") else None
+    n_eff = modes.effective_batch(n_local, batch_axis)
+    d = d_local
+    if mode == "tp":
+        d = int(d_local * modes.effective_batch(1, cfg.model_axis))
+
+    # raw-moment drift (mode-effective batch statistics, O(n d))
+    mean = modes.psum_if(jnp.sum(z1, axis=0), batch_axis) / n_eff
+    zc = z1 - mean
+    var = modes.psum_if(jnp.sum(zc * zc, axis=0), batch_axis) / max(n_eff - 1.0, 1.0)
+    mean_abs = jnp.mean(jnp.abs(mean))
+    std_err = jnp.mean(jnp.abs(jnp.sqrt(var + cfg.eps) - 1.0))
+    if mode == "tp":
+        p = modes.effective_batch(1, cfg.model_axis)
+        mean_abs = jax.lax.psum(mean_abs, cfg.model_axis) / p
+        std_err = jax.lax.psum(std_err, cfg.model_axis) / p
+
+    # training-identical normalization + scale
+    if cfg.style == "bt":
+        a = engine.standardize(z1, cfg, mode)
+        b = a if same else engine.standardize(z2, cfg, mode)
+        ddof = 0
+    else:
+        a = engine.center(z1, cfg, mode)
+        b = a if same else engine.center(z2, cfg, mode)
+        ddof = 1
+
+    def _reg(reg_cfg: DecorrConfig) -> Array:
+        # local mode consumes the explicit scale; global/tp recompute the
+        # exact effective-batch normalizer from ddof (engine semantics).
+        return engine.regularizer(
+            a, b, reg_cfg, max(n_local - ddof, 1), perm_key, ddof=ddof
+        )
+
+    out: Dict[str, Array] = {}
+    sum_cfg = cfg if cfg.reg == "sum" else dataclasses.replace(cfg, reg="sum")
+    out["r_sum"] = _reg(sum_cfg)
+    out["r_sum_norm"] = out["r_sum"] / max(d - 1, 1)
+    if _should_include_off(cfg, d, include_off):
+        off_cfg = dataclasses.replace(cfg, reg="off", use_kernel=False)
+        out["r_off"] = _reg(off_cfg)
+        out["r_off_norm"] = out["r_off"] / max(d * (d - 1), 1)
+
+    if not same:
+        if cfg.style == "bt":
+            cjj = modes.psum_if(jnp.sum(a * b, axis=0), batch_axis) / n_eff
+            diag_err = jnp.mean(jnp.abs(1.0 - cjj))
+            if mode == "tp":
+                p = modes.effective_batch(1, cfg.model_axis)
+                diag_err = jax.lax.psum(diag_err, cfg.model_axis) / p
+            out["diag_err"] = diag_err
+        else:
+            inv = modes.psum_if(jnp.sum((z1 - z2) ** 2), batch_axis)
+            if mode == "tp":
+                inv = jax.lax.psum(inv, cfg.model_axis)
+            out["diag_err"] = inv / (n_eff * d)
+
+    out["n_eff"] = jnp.asarray(n_eff, jnp.float32)
+    return out

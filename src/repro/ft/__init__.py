@@ -1,2 +1,7 @@
-from repro.ft.watchdog import StragglerWatchdog, PreemptionSignal, with_retries
+from repro.ft.watchdog import (
+    HeartbeatMonitor,
+    PreemptionSignal,
+    StragglerWatchdog,
+    with_retries,
+)
 from repro.ft.elastic import reshard_to_mesh, elastic_restore

@@ -12,7 +12,7 @@ from __future__ import annotations
 import os
 import time
 from collections import deque
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional
 
 
 class StragglerWatchdog:
@@ -47,6 +47,67 @@ class StragglerWatchdog:
         if not self.durations:
             return 0.0
         return sorted(self.durations)[len(self.durations) // 2]
+
+
+class HeartbeatMonitor:
+    """Liveness tracking for long-running components (serve dispatch loop,
+    train loop, checkpoint writer).  Components ``register`` with a timeout
+    and ``beat`` on every unit of progress; ``stale()`` reports the ones
+    whose last beat is older than their timeout.  Transitions fresh->stale
+    are counted once each (``missed_events``), so a flapping component shows
+    up as many events rather than one long one.
+
+    ``clock`` is injectable (monotonic seconds) so tests — and deterministic
+    replay of an incident — never sleep.
+    """
+
+    def __init__(self, default_timeout_s: float = 10.0, clock: Callable[[], float] = time.monotonic):
+        self.default_timeout_s = default_timeout_s
+        self._clock = clock
+        self._last: Dict[str, float] = {}
+        self._timeout: Dict[str, float] = {}
+        self._was_stale: Dict[str, bool] = {}
+        self.missed_events = 0
+
+    def register(self, name: str, timeout_s: Optional[float] = None):
+        self._timeout[name] = self.default_timeout_s if timeout_s is None else float(timeout_s)
+        self._last[name] = self._clock()
+        self._was_stale[name] = False
+
+    def beat(self, name: str):
+        if name not in self._last:
+            self.register(name)
+        self._last[name] = self._clock()
+        self._was_stale[name] = False
+
+    def stale(self) -> Dict[str, float]:
+        """{name: seconds since last beat} for every overdue component.
+        Fresh->stale transitions increment ``missed_events``."""
+        now = self._clock()
+        out: Dict[str, float] = {}
+        for name, last in self._last.items():
+            age = now - last
+            if age > self._timeout[name]:
+                out[name] = age
+                if not self._was_stale[name]:
+                    self._was_stale[name] = True
+                    self.missed_events += 1
+        return out
+
+    def age(self, name: str) -> float:
+        return self._clock() - self._last[name]
+
+    def metrics(self, prefix: str = "heartbeat_") -> Dict[str, float]:
+        """Flat gauge dict for scraping alongside the serve metrics."""
+        overdue = self.stale()
+        out = {
+            f"{prefix}components": float(len(self._last)),
+            f"{prefix}stale": float(len(overdue)),
+            f"{prefix}missed_events": float(self.missed_events),
+        }
+        for name in self._last:
+            out[f"{prefix}age_s:{name}"] = self.age(name)
+        return out
 
 
 class PreemptionSignal:

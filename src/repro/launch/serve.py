@@ -2,18 +2,19 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --reduced \
         --batch 4 --prompt-len 32 --new-tokens 16
+
+For the production embedding-serving path (dynamic micro-batching, online
+decorrelation probes, load generation) see ``python -m repro.serve.cli``.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.train.serve import greedy_generate
+from repro.serve.common import make_prompt, timed_generate
 
 
 def main():
@@ -32,18 +33,11 @@ def main():
     from repro.models import init_params
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
-    key = jax.random.PRNGKey(args.seed + 1)
-    if cfg.frontend == "audio_codes":
-        prompt = jax.random.randint(key, (args.batch, args.prompt_len, cfg.n_codebooks), 0, cfg.vocab_size)
-    else:
-        prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    prompt = make_prompt(cfg, jax.random.PRNGKey(args.seed + 1), args.batch, args.prompt_len)
 
-    t0 = time.time()
-    out = greedy_generate(params, cfg, prompt, args.new_tokens)
-    dt = time.time() - t0
-    n_tok = args.batch * args.new_tokens
-    print(f"[serve] arch={cfg.name} generated {out.shape} in {dt:.2f}s "
-          f"({n_tok/dt:.1f} tok/s batch throughput)")
+    out, stats = timed_generate(params, cfg, prompt, args.new_tokens, warmup_tokens=0)
+    print(f"[serve] arch={cfg.name} generated {out.shape} in {stats['seconds']:.2f}s "
+          f"({stats['tok_per_s']:.1f} tok/s batch throughput)")
     print("first row:", out[0, :10].tolist())
 
 

@@ -1,0 +1,54 @@
+"""repro.serve — the batched embedding-serving subsystem.
+
+Layers (one module each):
+
+  * ``buckets``  — shape buckets + admission policy (``BucketPolicy``), padded
+                   to the Pallas tile boundaries ``repro.tune`` enumerates;
+  * ``batcher``  — dynamic micro-batcher: bounded FIFO + futures +
+                   max-latency/max-batch coalescing + backpressure;
+  * ``engine``   — ``ServeEngine``: per-bucket jit cache over the SSL
+                   encoder+projector, ``repro.checkpoint`` loading, optional
+                   shard_map execution; ``LMServeEngine`` for token models;
+  * ``probes``   — ``DecorrProbe``: streaming (EMA) feature moments + the
+                   training-oracle-exact R_off/R_sum health metrics via
+                   ``repro.decorr.probe_metrics``;
+  * ``service``  — ``EmbeddingService``: dispatch loop wiring batcher,
+                   engine, probe, latency stats and the ``repro.ft``
+                   heartbeat into one scrapeable object;
+  * ``loadgen``  — deterministic load generation + naive-vs-micro-batched
+                   policy comparison (the bench/CLI core);
+  * ``common``   — shared token-model helpers (prompt construction,
+                   warmup-then-time generation);
+  * ``cli``      — ``python -m repro.serve.cli`` (``--smoke`` in CI).
+
+    from repro import serve
+    engine = serve.ServeEngine.from_checkpoint(ckpt_dir, model_cfg)
+    svc = serve.EmbeddingService(engine, probe=serve.DecorrProbe()).start()
+    z = svc.submit(x).result()
+    svc.metrics()   # latency/throughput/probe/heartbeat gauges
+"""
+
+from repro.serve.batcher import Backpressure, MicroBatcher, ServeFuture
+from repro.serve.buckets import BucketPolicy, bucket_for, bucket_shapes, bucket_sizes
+from repro.serve.engine import LMServeEngine, ServeEngine
+from repro.serve.loadgen import LoadConfig, compare_policies, run_microbatched, run_naive
+from repro.serve.probes import DecorrProbe
+from repro.serve.service import EmbeddingService
+
+__all__ = [
+    "Backpressure",
+    "BucketPolicy",
+    "DecorrProbe",
+    "EmbeddingService",
+    "LMServeEngine",
+    "LoadConfig",
+    "MicroBatcher",
+    "ServeEngine",
+    "ServeFuture",
+    "bucket_for",
+    "bucket_shapes",
+    "bucket_sizes",
+    "compare_policies",
+    "run_microbatched",
+    "run_naive",
+]

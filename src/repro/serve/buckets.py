@@ -1,0 +1,69 @@
+"""Shape buckets + admission policy for the serving micro-batcher.
+
+Every distinct batch size the engine sees is one compiled XLA executable, so
+requests are coalesced into a bounded geometric ladder of batch buckets
+(each a multiple of the Pallas sublane tile, so the padded shapes are
+exactly the tile boundaries ``repro.tune`` enumerates).  A request batch of
+n rows is padded up to ``bucket_for(n)`` rows and the padding sliced off the
+result — the compile cache can hold at most ``len(bucket_sizes(policy))``
+variants, all pre-warmable offline (``repro.tune.cli --serve`` /
+``ServeEngine.warmup``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from repro.kernels.pallas_utils import SUBLANE, next_multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """Admission policy of the dynamic micro-batcher.
+
+    max_batch:    largest bucket (requests per dispatch cap)
+    max_wait_ms:  latency budget — after the first queued request, dispatch
+                  no later than this even if the bucket is not full
+    max_queue:    backpressure bound — ``submit`` refuses beyond this depth
+    align:        bucket granularity; defaults to the f32 sublane tile (8)
+                  so padded batches land on the tuned tile boundaries.  Under
+                  a mesh it must also be a multiple of the data-axis size.
+    """
+
+    max_batch: int = 64
+    max_wait_ms: float = 2.0
+    max_queue: int = 1024
+    align: int = SUBLANE
+
+    def validate(self) -> "BucketPolicy":
+        assert self.max_batch >= 1 and self.align >= 1, (self.max_batch, self.align)
+        assert self.max_wait_ms >= 0.0, self.max_wait_ms
+        assert self.max_queue >= 1, self.max_queue
+        return self
+
+
+def bucket_sizes(policy: BucketPolicy) -> Tuple[int, ...]:
+    """The geometric ladder of batch buckets: align, 2*align, ... >= max_batch."""
+    policy.validate()
+    sizes: List[int] = []
+    b = policy.align
+    while b < policy.max_batch:
+        sizes.append(b)
+        b *= 2
+    sizes.append(next_multiple(policy.max_batch, policy.align))
+    return tuple(sizes)
+
+
+def bucket_for(n: int, policy: BucketPolicy) -> int:
+    """Smallest bucket holding n rows (n is clamped to max_batch upstream)."""
+    assert n >= 1, n
+    for b in bucket_sizes(policy):
+        if b >= n:
+            return b
+    return bucket_sizes(policy)[-1]
+
+
+def bucket_shapes(policy: BucketPolicy, d: int) -> List[Tuple[int, int]]:
+    """(bucket, d) pairs — the pre-tune / warmup job list for one width."""
+    return [(b, d) for b in bucket_sizes(policy)]

@@ -1,0 +1,176 @@
+"""Serve CLI: load-generate against the embedding service and print the
+scrape metrics.
+
+    # reduced end-to-end smoke (CI): naive vs micro-batched + probes
+    PYTHONPATH=src python -m repro.serve.cli --smoke
+
+    # bigger sweep, explicit knobs
+    PYTHONPATH=src python -m repro.serve.cli --requests 1024 --d 2048 \
+        --max-batch 64 --max-wait-ms 2
+
+    # token-model serving demo (prefill/decode path, shared helpers)
+    PYTHONPATH=src python -m repro.serve.cli --lm-arch rwkv6-3b
+
+``--pretune`` warms the repro.tune cache for the serve bucket shapes first —
+the same job list ``python -m repro.tune.cli --serve`` persists offline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.serve.buckets import BucketPolicy, bucket_sizes
+
+
+def _build_engine(args):
+    import jax
+
+    from repro.decorr.config import DecorrConfig
+    from repro.serve.engine import ServeEngine
+    from repro.serve.probes import DecorrProbe
+    from repro.train.ssl import SSLModelConfig, init_ssl_params
+
+    model = SSLModelConfig(
+        input_dim=args.input_dim,
+        backbone_widths=(args.backbone,),
+        projector_widths=(args.d, args.d),
+    )
+    policy = BucketPolicy(
+        max_batch=args.max_batch,
+        max_wait_ms=args.max_wait_ms,
+        max_queue=args.max_queue,
+    )
+
+    def engine_fn():
+        if args.ckpt_dir:
+            return ServeEngine.from_checkpoint(args.ckpt_dir, model, policy=policy)
+        params = init_ssl_params(jax.random.PRNGKey(args.seed), model)
+        return ServeEngine(model, params, policy=policy)
+
+    probe_cfg = DecorrConfig(
+        style=args.probe_style, reg="sum", q=2, block_size=args.probe_block
+    )
+    return model, policy, engine_fn, lambda: DecorrProbe(probe_cfg)
+
+
+def _run_embedding(args) -> int:
+    from repro.serve.loadgen import LoadConfig, compare_policies
+
+    model, policy, engine_fn, probe_fn = _build_engine(args)
+
+    if args.pretune != "off":
+        from repro import tune
+        from repro.tune.cli import jobs_for
+
+        n_jobs = 0
+        for b in bucket_sizes(policy):
+            _, jobs = jobs_for(
+                b, args.d, block_size=args.probe_block, forward_only=True,
+                mode=args.pretune, persist=False,
+            )
+            n_jobs += 1 + len(jobs)
+            for kernel, shape in jobs:
+                tune.tune(kernel, shape, mode=args.pretune, persist=False)
+        print(f"[serve] pre-tuned {n_jobs} forward bucket shapes ({args.pretune})")
+
+    load = LoadConfig(
+        n_requests=args.requests,
+        input_dim=args.input_dim,
+        arrival_rps=args.arrival_rps,
+        seed=args.seed,
+    )
+    print(
+        f"[serve] d={args.d} requests={load.n_requests} "
+        f"buckets={list(bucket_sizes(policy))} max_wait={policy.max_wait_ms}ms"
+    )
+    report = compare_policies(engine_fn, load, policy, probe_fn=probe_fn)
+    for name in ("naive", "microbatch"):
+        r = report[name]
+        print(
+            f"[serve] {name:>10}: p50={r['p50_ms']:.2f}ms p99={r['p99_ms']:.2f}ms "
+            f"throughput={r['throughput_rps']:.0f} req/s"
+        )
+    g = report["gate"]
+    print(f"[serve] micro-batching speedup: {g['speedup']:.2f}x "
+          f"(beats naive: {g['microbatch_beats_naive']})")
+    if args.json:
+        print(json.dumps(report, indent=2, sort_keys=True, default=float))
+    else:
+        m = report["service_metrics"]
+        probes = {k: round(v, 6) for k, v in m.items() if k.startswith("decorr_")}
+        print(f"[serve] probe metrics: {probes}")
+        print(f"[serve] heartbeat stale={m['heartbeat_stale']:.0f} "
+              f"missed={m['heartbeat_missed_events']:.0f}")
+    return 0 if g["microbatch_beats_naive"] or not args.gate else 1
+
+
+def _run_lm(args) -> int:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve.common import make_prompt, timed_generate
+    from repro.serve.engine import LMServeEngine
+
+    cfg = get_config(args.lm_arch).reduced()
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    engine = LMServeEngine(cfg)
+    prompt = make_prompt(cfg, jax.random.PRNGKey(args.seed + 1), args.max_batch, args.prompt_len)
+    out, stats = timed_generate(
+        params, cfg, prompt, args.new_tokens, steps=engine.steps
+    )
+    print(
+        f"[serve] lm arch={cfg.name} (reduced): batch={prompt.shape[0]} "
+        f"prompt={args.prompt_len} -> {args.new_tokens} tokens in "
+        f"{stats['seconds']:.2f}s ({stats['tok_per_s']:.1f} tok/s)"
+    )
+    print("sample:", out[0].tolist()[:8])
+    return 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="repro.serve.cli", description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced config + few requests (CI smoke; implies --gate)")
+    p.add_argument("--requests", type=int, default=512)
+    p.add_argument("--input-dim", type=int, default=128)
+    p.add_argument("--backbone", type=int, default=256)
+    p.add_argument("--d", type=int, default=512, help="projector/embedding width")
+    p.add_argument("--max-batch", type=int, default=32)
+    p.add_argument("--max-wait-ms", type=float, default=2.0)
+    p.add_argument("--max-queue", type=int, default=4096)
+    p.add_argument("--arrival-rps", type=float, default=None,
+                   help="open-loop arrival rate (default: closed-loop burst)")
+    p.add_argument("--ckpt-dir", default=None,
+                   help="serve params from a repro.checkpoint directory")
+    p.add_argument("--probe-style", default="vic", choices=["bt", "vic"])
+    p.add_argument("--probe-block", type=int, default=None)
+    p.add_argument("--pretune", default="off",
+                   choices=["off", "analytic", "dry", "measure"],
+                   help="warm the repro.tune cache for the serve buckets first")
+    p.add_argument("--gate", action="store_true",
+                   help="exit 1 unless micro-batched throughput beats naive")
+    p.add_argument("--json", action="store_true", help="dump the full report as JSON")
+    p.add_argument("--seed", type=int, default=0)
+    # token-model demo path
+    p.add_argument("--lm-arch", default=None,
+                   help="serve a token model instead (e.g. rwkv6-3b, gemma2-2b)")
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--new-tokens", type=int, default=8)
+    args = p.parse_args(argv)
+
+    if args.smoke:
+        args.requests = min(args.requests, 192)
+        args.input_dim, args.backbone, args.d = 32, 64, 256
+        args.max_batch = min(args.max_batch, 32)
+        args.gate = True
+
+    if args.lm_arch:
+        return _run_lm(args)
+    return _run_embedding(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,59 @@
+"""Shared token-model serving helpers.
+
+``launch/serve.py``, ``examples/serve_demo.py`` and the serve CLI all used
+to carry their own copies of the frontend-aware prompt construction and the
+warmup-then-time generate loop; this module is the single home for both.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+
+Array = jax.Array
+
+
+def make_prompt(cfg, key: Array, batch: int, prompt_len: int) -> Array:
+    """Random token prompt with the frontend-correct shape: (B, S) for token
+    models, (B, S, n_codebooks) for audio-code models."""
+    if cfg.frontend == "audio_codes":
+        shape = (batch, prompt_len, cfg.n_codebooks)
+    else:
+        shape = (batch, prompt_len)
+    return jax.random.randint(key, shape, 0, cfg.vocab_size)
+
+
+def timed_generate(
+    params,
+    cfg,
+    prompt: Array,
+    new_tokens: int,
+    *,
+    warmup_tokens: int = 2,
+    steps=None,
+) -> Tuple[Array, Dict[str, float]]:
+    """Warm (compile prefill + decode), then time one generate call.
+
+    Returns (tokens, stats) with ``seconds``, ``tokens`` (new tokens emitted
+    across the batch) and ``tok_per_s`` batch throughput.
+    """
+    from repro.train.serve import greedy_generate, make_decode_step, make_prefill_step
+
+    if steps is None:
+        # jit once here: greedy_generate's own per-call jits would retrace on
+        # the timed call, and the warmup below would warm nothing.
+        steps = (jax.jit(make_prefill_step(cfg)), jax.jit(make_decode_step(cfg)))
+    max_len = prompt.shape[1] + new_tokens
+    if warmup_tokens > 0:
+        out = greedy_generate(
+            params, cfg, prompt, min(warmup_tokens, new_tokens), max_len=max_len, steps=steps
+        )
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = greedy_generate(params, cfg, prompt, new_tokens, max_len=max_len, steps=steps)
+    jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    n_tok = int(prompt.shape[0]) * new_tokens
+    return out, {"seconds": dt, "tokens": float(n_tok), "tok_per_s": n_tok / max(dt, 1e-9)}

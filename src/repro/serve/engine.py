@@ -1,0 +1,188 @@
+"""The serving engine: bucketed, jit-cached embedding forward passes.
+
+``ServeEngine`` wraps the SSL encoder+projector (``repro.train.ssl.embed``)
+behind a per-bucket compile cache: inputs are padded to the request bucket
+(``repro.serve.buckets``), each bucket compiles exactly once, and ``warmup``
+pre-compiles the whole ladder so no request pays a trace.  Parameters come
+either in-memory or from a ``repro.checkpoint`` directory (the training
+loop's own format — the round trip is pinned by tests).  Under a mesh the
+forward runs data-parallel inside ``shard_map`` (batch sharded over the
+``data`` axis, params replicated) — the same execution regime as
+``train/ssl.make_sharded_ssl_train_step``, minus the gradients.
+
+``LMServeEngine`` is the token-model counterpart: it consumes the
+prefill/decode step factories from ``repro.train.serve`` and caches their
+jitted forms across requests, so repeated generate calls of one shape
+compile once.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.checkpoint.checkpointer import latest_step, restore_checkpoint
+from repro.serve.buckets import BucketPolicy, bucket_for, bucket_sizes
+from repro.train.ssl import SSLModelConfig, embed, init_ssl_params
+
+Array = jax.Array
+
+
+class ServeEngine:
+    """Embedding forward with a bounded per-bucket compile cache."""
+
+    def __init__(
+        self,
+        model_cfg: SSLModelConfig,
+        params,
+        *,
+        policy: BucketPolicy = BucketPolicy(),
+        mesh: Optional[Mesh] = None,
+        data_axis: str = "data",
+        dtype=jnp.float32,
+    ):
+        self.model_cfg = model_cfg
+        self.params = params
+        self.policy = policy.validate()
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.dtype = dtype
+        if mesh is not None:
+            dp = int(mesh.shape[data_axis])
+            if policy.align % dp:
+                raise ValueError(
+                    f"BucketPolicy.align={policy.align} must be a multiple of "
+                    f"the {data_axis!r} mesh axis ({dp}) so every bucket shards evenly"
+                )
+        self._compiled: Dict[int, callable] = {}
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_checkpoint(
+        cls,
+        ckpt_dir: str,
+        model_cfg: SSLModelConfig,
+        *,
+        step: Optional[int] = None,
+        **kw,
+    ) -> "ServeEngine":
+        """Load encoder+projector params saved by the training loop.
+
+        Training checkpoints a ``TrainState`` whose params live under the
+        ``params`` key; a bare params tree (e.g. an exported snapshot) is
+        accepted too.  ``step=None`` takes the newest committed step.
+        """
+        if step is None:
+            step = latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
+        template = init_ssl_params(jax.random.PRNGKey(0), model_cfg)
+        try:
+            params = restore_checkpoint(ckpt_dir, step, template)
+        except KeyError:
+            # TrainState layout: restore just the params subtree by wrapping
+            # the template the way the train loop nests it.
+            from repro.train.train_state import TrainState
+
+            state = restore_checkpoint(
+                ckpt_dir, step, TrainState(0, template, None, None)
+            )
+            params = state.params
+        return cls(model_cfg, params, **kw)
+
+    # -- compile cache ------------------------------------------------------
+
+    @property
+    def d(self) -> int:
+        return int(self.model_cfg.projector_widths[-1])
+
+    def _embed_fn(self, bucket: int):
+        fn = self._compiled.get(bucket)
+        if fn is not None:
+            return fn
+        if self.mesh is None:
+            fn = jax.jit(embed)
+        else:
+            sharded = shard_map(
+                embed,
+                mesh=self.mesh,
+                in_specs=(P(), P(self.data_axis)),
+                out_specs=P(self.data_axis),
+            )
+            fn = jax.jit(sharded)
+        self._compiled[bucket] = fn
+        return fn
+
+    def warmup(self) -> Tuple[int, ...]:
+        """Pre-compile every bucket (AOT) so no request pays a trace."""
+        for b in bucket_sizes(self.policy):
+            shape = jax.ShapeDtypeStruct((b, self.model_cfg.input_dim), self.dtype)
+            fn = self._embed_fn(b)
+            self._compiled[b] = fn.lower(self.params, shape).compile()
+        return bucket_sizes(self.policy)
+
+    def compiled_buckets(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._compiled))
+
+    # -- serving forward ----------------------------------------------------
+
+    def encode(self, x: Array) -> Array:
+        """(n, input_dim) -> (n, d): pad to the bucket, run, strip padding.
+
+        n must be <= ``policy.max_batch`` rows (the batcher guarantees it);
+        rows are independent through the MLP so zero-padding never leaks into
+        real outputs.
+        """
+        x = jnp.asarray(x, self.dtype)
+        if x.ndim == 1:
+            x = x[None, :]
+        n = x.shape[0]
+        top = bucket_sizes(self.policy)[-1]
+        if n > top:
+            # coalescing can overshoot max_batch by one multi-row request
+            # (and the naive bench feeds arbitrary n): chunk at the largest
+            # bucket so every executable stays within the warmed ladder.
+            parts = [self.encode(x[i : i + top]) for i in range(0, n, top)]
+            return jnp.concatenate(parts, axis=0)
+        b = bucket_for(n, self.policy)
+        if n < b:
+            x = jnp.concatenate([x, jnp.zeros((b - n, x.shape[1]), self.dtype)], axis=0)
+        z = self._embed_fn(b)(self.params, x)
+        return z[:n]
+
+
+# ---------------------------------------------------------------------------
+# Token-model serving: prefill/decode factories from repro.train.serve
+# ---------------------------------------------------------------------------
+
+
+class LMServeEngine:
+    """Greedy generation with the prefill/decode steps compiled once.
+
+    ``repro.train.serve.greedy_generate`` builds (and jits) its step
+    functions per call; this engine owns them across requests, keyed by
+    nothing — prefill/decode are shape-polymorphic in batch via retrace, and
+    XLA's jit cache bounds the variants to the distinct (batch, prompt_len)
+    shapes actually served.
+    """
+
+    def __init__(self, arch_cfg):
+        from repro.train.serve import make_decode_step, make_prefill_step
+
+        self.cfg = arch_cfg
+        self.steps = (
+            jax.jit(make_prefill_step(arch_cfg)),
+            jax.jit(make_decode_step(arch_cfg)),
+        )
+
+    def generate(self, params, prompt_tokens: Array, max_new_tokens: int) -> Array:
+        from repro.train.serve import greedy_generate
+
+        return greedy_generate(
+            params, self.cfg, prompt_tokens, max_new_tokens, steps=self.steps
+        )

@@ -1,0 +1,138 @@
+"""Online decorrelation probes for the serve path.
+
+Wraps ``repro.decorr.probe_metrics`` (training-oracle-exact R_off / R_sum on
+a served batch) in a streaming monitor: per-batch values are folded into
+exponential moving averages, and per-feature first/second moments are EMA'd
+as full length-d vectors so serving can detect *which* features drift, not
+just that something did.  The permutation key follows the training
+construction (``permutation_for_step``: fold the probe step count into a
+fixed seed key) so a probe reading at step t is reproducible offline.
+
+``metrics()`` exports one flat ``{str: float}`` dict — the scrape surface
+(Prometheus-shaped: gauges only, no nesting).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.decorr.config import DecorrConfig
+from repro.decorr.probe import probe_metrics
+
+Array = jax.Array
+
+
+class DecorrProbe:
+    """Streaming representation-health monitor for served embeddings."""
+
+    def __init__(
+        self,
+        cfg: DecorrConfig = DecorrConfig(style="vic", reg="sum", q=2),
+        *,
+        ema: float = 0.99,
+        perm_seed: int = 0,
+        include_off: Optional[bool] = None,
+        sample_rows: Optional[int] = None,
+    ):
+        self.cfg = cfg.validate()
+        self.ema = float(ema)
+        self._seed_key = jax.random.PRNGKey(perm_seed)
+        self._include_off = include_off
+        # observe() coalesces rows into fixed (sample_rows, d) probes so the
+        # jitted probe compiles ONCE — dynamic micro-batches have ragged row
+        # counts and per-shape retraces would land in the dispatch loop.
+        self.sample_rows = sample_rows
+        self._buf: list = []
+        self._buf_rows = 0
+        self._step = 0
+        self._last: Dict[str, float] = {}
+        self._avg: Dict[str, float] = {}
+        self._mean_ema: Optional[Array] = None
+        self._m2_ema: Optional[Array] = None
+        # one jitted probe per (shape, two-view?) — cfg/include_off are fixed
+        self._probe = jax.jit(
+            functools.partial(probe_metrics, cfg=cfg, include_off=include_off)
+        )
+        self._moments = jax.jit(lambda z: (jnp.mean(z, axis=0), jnp.mean(z * z, axis=0)))
+
+    # -- streaming update ---------------------------------------------------
+
+    def update(self, z1: Array, z2: Optional[Array] = None) -> Dict[str, float]:
+        """Fold one served batch into the stream; returns this batch's metrics."""
+        # same key construction as training (see core/permutation.py): the
+        # engine samples the permutation itself from this step-folded key.
+        perm_key = jax.random.fold_in(self._seed_key, jnp.uint32(self._step))
+        vals = self._probe(z1, z2, perm_key=perm_key)
+        m1, m2 = self._moments(jnp.asarray(z1, jnp.float32))
+
+        # one host transfer for everything; EMAs fold in numpy so the stream
+        # update costs no further device dispatches.
+        vals, m1, m2 = jax.device_get((vals, m1, m2))
+        batch = {k: float(v) for k, v in vals.items()}
+        a = self.ema
+        for k, v in batch.items():
+            self._avg[k] = v if k not in self._avg else a * self._avg[k] + (1 - a) * v
+        self._mean_ema = m1 if self._mean_ema is None else a * self._mean_ema + (1 - a) * m1
+        self._m2_ema = m2 if self._m2_ema is None else a * self._m2_ema + (1 - a) * m2
+        self._last = batch
+        self._step += 1
+        return batch
+
+    def warmup(self, d: int):
+        """Compile the probe/moment kernels for the pinned sample shape
+        without folding anything into the stream (no EMA/step side effects)."""
+        n = self.sample_rows or 8
+        zero = jnp.zeros((n, d), jnp.float32)
+        key = jax.random.fold_in(self._seed_key, jnp.uint32(0))
+        jax.block_until_ready(self._probe(zero, None, perm_key=key))
+        jax.block_until_ready(self._moments(zero))
+
+    def observe(self, z: Array) -> int:
+        """Streaming entry point: buffer served rows, fold a probe update for
+        every full ``sample_rows`` window.  With ``sample_rows=None`` each
+        call probes immediately (exact per-batch semantics, one compiled
+        variant per distinct row count).  Returns probe updates fired."""
+        if self.sample_rows is None:
+            self.update(z)
+            return 1
+        self._buf.append(np.asarray(z, np.float32))
+        self._buf_rows += int(z.shape[0])
+        fired = 0
+        while self._buf_rows >= self.sample_rows:
+            flat = np.concatenate(self._buf, axis=0)
+            sample, rest = flat[: self.sample_rows], flat[self.sample_rows :]
+            self._buf = [rest] if rest.size else []
+            self._buf_rows = int(rest.shape[0]) if rest.size else 0
+            self.update(sample)
+            fired += 1
+        return fired
+
+    # -- scrape surface -----------------------------------------------------
+
+    @property
+    def steps(self) -> int:
+        return self._step
+
+    def feature_moments(self):
+        """(EMA mean, EMA var) per feature — length-d drift vectors."""
+        if self._mean_ema is None:
+            return None, None
+        var = np.maximum(self._m2_ema - self._mean_ema**2, 0.0)
+        return self._mean_ema, var
+
+    def metrics(self, prefix: str = "decorr_") -> Dict[str, float]:
+        out = {f"{prefix}probe_steps": float(self._step)}
+        for k, v in self._last.items():
+            out[f"{prefix}{k}"] = v
+        for k, v in self._avg.items():
+            out[f"{prefix}{k}_ema"] = v
+        mean, var = self.feature_moments()
+        if mean is not None:
+            out[f"{prefix}feat_mean_abs_ema"] = float(np.mean(np.abs(mean)))
+            out[f"{prefix}feat_var_ema"] = float(np.mean(var))
+        return out

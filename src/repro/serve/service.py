@@ -1,0 +1,188 @@
+"""The embedding service: batcher + engine + probes + liveness, one object.
+
+``EmbeddingService`` runs the dispatch loop — pop a coalesced batch from the
+``MicroBatcher``, pad-and-encode through the ``ServeEngine``, fan results
+back out to the request futures, feed the ``DecorrProbe`` and the
+``repro.ft`` heartbeat — either on a background thread (``start``/``stop``,
+the production shape) or synchronously (``run_pending``, what tests and the
+closed-loop benchmark drive).  ``metrics()`` is the scrape surface: latency
+percentiles, throughput, queue depth, batch-shape histogram, probe health,
+heartbeat ages — all flat float gauges.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.ft.watchdog import HeartbeatMonitor
+from repro.serve.batcher import MicroBatcher, Request, ServeFuture
+from repro.serve.buckets import BucketPolicy
+from repro.serve.engine import ServeEngine
+from repro.serve.probes import DecorrProbe
+
+HEARTBEAT_NAME = "serve.dispatch"
+
+
+class LatencyStats:
+    """Rolling per-request latency window + monotone served counter."""
+
+    def __init__(self, window: int = 4096):
+        self._lat = collections.deque(maxlen=window)
+        self.served = 0
+        self.batches = 0
+        self._t_start = time.perf_counter()
+
+    def reset_clock(self):
+        """Restart the throughput window (called when serving actually
+        starts, so warmup compilation and pre-start idle time don't deflate
+        the scraped rate)."""
+        self._t_start = time.perf_counter()
+
+    def observe_batch(self, latencies_s: List[float]):
+        self._lat.extend(latencies_s)
+        self.served += len(latencies_s)
+        self.batches += 1
+
+    def percentile(self, q: float) -> float:
+        if not self._lat:
+            return 0.0
+        return float(np.percentile(np.asarray(self._lat), q))
+
+    def metrics(self, prefix: str = "latency_") -> Dict[str, float]:
+        dt = max(time.perf_counter() - self._t_start, 1e-9)
+        return {
+            f"{prefix}p50_ms": self.percentile(50) * 1e3,
+            f"{prefix}p99_ms": self.percentile(99) * 1e3,
+            "served_total": float(self.served),
+            "batches_total": float(self.batches),
+            "mean_batch": self.served / max(self.batches, 1),
+            "throughput_rps": self.served / dt,
+        }
+
+
+class EmbeddingService:
+    """Batched embedding serving with online representation-health probes."""
+
+    def __init__(
+        self,
+        engine: ServeEngine,
+        *,
+        policy: Optional[BucketPolicy] = None,
+        probe: Optional[DecorrProbe] = None,
+        heartbeat: Optional[HeartbeatMonitor] = None,
+        heartbeat_timeout_s: float = 10.0,
+    ):
+        self.engine = engine
+        self.policy = (policy or engine.policy).validate()
+        self.batcher = MicroBatcher(self.policy)
+        self.probe = probe
+        if probe is not None and probe.sample_rows is None:
+            # pin the probe to one compiled shape: the largest bucket
+            from repro.serve.buckets import bucket_sizes
+
+            probe.sample_rows = bucket_sizes(self.policy)[-1]
+        self.stats = LatencyStats()
+        self.heartbeat = heartbeat or HeartbeatMonitor()
+        self.heartbeat.register(HEARTBEAT_NAME, heartbeat_timeout_s)
+        self._thread: Optional[threading.Thread] = None
+        self._errors = 0
+
+    # -- request side -------------------------------------------------------
+
+    def submit(self, x, **kw) -> ServeFuture:
+        """Queue one request (a single input row or a small row-batch).
+        Raises ``repro.serve.batcher.Backpressure`` when the queue is full."""
+        return self.batcher.submit(np.asarray(x), **kw)
+
+    # -- dispatch loop ------------------------------------------------------
+
+    def _dispatch(self, requests: List[Request]):
+        rows = [r.x if r.x.ndim == 2 else r.x[None] for r in requests]
+        x = np.concatenate(rows, axis=0)
+        try:
+            z = self.engine.encode(x)
+            z.block_until_ready()
+        except Exception as e:  # pragma: no cover - device failure path
+            self._errors += 1
+            for r in requests:
+                r.future.set_exception(e)
+            return
+        # one device->host transfer, then numpy fan-out: per-request device
+        # slices would each compile their own XLA gather and dispatch 1/row.
+        z_host = np.asarray(z)
+        if self.probe is not None:
+            self.probe.observe(z_host)
+        off = 0
+        for r in requests:
+            n = r.x.shape[0] if r.x.ndim == 2 else 1
+            out = z_host[off] if r.x.ndim == 1 else z_host[off : off + n]
+            r.future.set_result(out)
+            off += n
+        self.stats.observe_batch(
+            [r.future.latency_s for r in requests if r.future.latency_s is not None]
+        )
+        self.heartbeat.beat(HEARTBEAT_NAME)
+
+    def run_pending(self, timeout: float = 0.0) -> int:
+        """Synchronously serve one admission batch; returns requests served.
+        (The deterministic entry point — tests and the closed-loop bench.)"""
+        batch = self.batcher.next_batch(timeout=timeout)
+        if not batch:
+            return 0
+        self._dispatch(batch)
+        return len(batch)
+
+    def _loop(self):
+        while True:
+            batch = self.batcher.next_batch(timeout=0.05)
+            if batch is None:  # shutdown sentinel
+                return
+            if batch:
+                self._dispatch(batch)
+            else:
+                # idle tick still beats: staleness must mean a wedged loop,
+                # not an empty queue.
+                self.heartbeat.beat(HEARTBEAT_NAME)
+
+    def warmup(self) -> "EmbeddingService":
+        """Pre-compile every engine bucket AND the probe sample shape, so the
+        dispatch loop never traces while requests wait."""
+        self.engine.warmup()
+        if self.probe is not None:
+            self.probe.warmup(self.engine.d)
+        self.stats.reset_clock()
+        return self
+
+    def start(self) -> "EmbeddingService":
+        if self._thread is not None:
+            raise RuntimeError("service already started")
+        self._thread = threading.Thread(target=self._loop, name="serve-dispatch", daemon=True)
+        self.stats.reset_clock()
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 10.0):
+        if self._thread is None:
+            return
+        self.batcher.shutdown()
+        self._thread.join(timeout)
+        self._thread = None
+
+    # -- scrape surface -----------------------------------------------------
+
+    def metrics(self) -> Dict[str, float]:
+        out = {
+            "queue_depth": float(self.batcher.depth()),
+            "dispatch_errors": float(self._errors),
+            "compiled_buckets": float(len(self.engine.compiled_buckets())),
+        }
+        out.update(self.stats.metrics())
+        out.update(self.heartbeat.metrics())
+        if self.probe is not None:
+            out.update(self.probe.metrics())
+        return out

@@ -58,13 +58,20 @@ def greedy_generate(
     prompt_tokens: Array,
     max_new_tokens: int,
     max_len: Optional[int] = None,
+    steps: Optional[Tuple] = None,
 ) -> Array:
-    """Host-loop batched greedy decoding (token-id models)."""
+    """Host-loop batched greedy decoding (token-id models).
+
+    ``steps``: optional pre-jitted ``(prefill, decode)`` pair (e.g. from
+    ``repro.serve.engine.LMServeEngine``) so repeated calls share one compile
+    cache; by default each call jits its own.
+    """
     b, s = prompt_tokens.shape[:2]
     max_len = max_len or (s + max_new_tokens)
     caches = init_caches(cfg, b, max_len)
-    prefill = jax.jit(make_prefill_step(cfg))
-    decode = jax.jit(make_decode_step(cfg))
+    if steps is None:
+        steps = (jax.jit(make_prefill_step(cfg)), jax.jit(make_decode_step(cfg)))
+    prefill, decode = steps
 
     logits, caches = prefill(params, caches, tokens=prompt_tokens)
     if cfg.frontend == "audio_codes":

@@ -8,6 +8,8 @@ winners to the JSON cache so training jobs start with a warm cache.
     python -m repro.tune.cli --dry --arch ssl-paper        # HLO-ranked, deterministic
     python -m repro.tune.cli --measure --arch ssl-paper    # wall-time ranked
     python -m repro.tune.cli --analytic --shape 256x2048   # instant, model-only
+    python -m repro.tune.cli --dry --serve --shape 64x2048 # serve bucket ladder,
+                                                           # forward-only shapes
 """
 
 from __future__ import annotations
@@ -36,13 +38,15 @@ def arch_shapes(name: str) -> List[Tuple[int, int]]:
     return [(n, d) for d in widths]
 
 
-def jobs_for(n: int, d: int, block_size=None, **tune_kw):
+def jobs_for(n: int, d: int, block_size=None, forward_only=False, **tune_kw):
     """All tunable kernel shapes reached from one (n, d) regularizer call,
     forward AND backward pass (training dispatches the vjp shapes too).
 
     ``block_size``: the grouped-regularizer b the training config will use
     (None = the paper default via ``auto_block_size``) — pass the real one,
     or the grouped shapes warmed here won't match runtime dispatch.
+    ``forward_only``: drop the vjp shapes — the serve path (inference probes)
+    never differentiates, so pre-tuning them would warm dead entries.
 
     The four-step inner matmul shapes depend on the FFT plan, so the plan is
     tuned here first and the derived shapes read off the winner.  Returns
@@ -63,21 +67,25 @@ def jobs_for(n: int, d: int, block_size=None, **tune_kw):
         ("cmatmul", (n * d2, d1, d1)),
         ("cmatmul", (n * d1, d2, d2)),
         ("ctwiddle", (n, dp)),
-        # four-step vjp: dB = A^H @ g shapes from _cmm_bwd
-        ("cmatmul", (d1, n * d2, d1)),
-        ("cmatmul", (d2, n * d1, d2)),
         # inverse four-step (padded plans and q = 1): batch-1 accumulator
         ("cmatmul", (d1, d2, d2)),
         ("cmatmul", (d2, d1, d1)),
         ("ctwiddle", (1, dp)),
-        # grouped pipeline: block DFT fwd + its vjp + pairwise stage
+        # grouped pipeline: block DFT fwd + pairwise stage
         ("pmatmul", (n * nb, b, 2 * nf)),
-        ("pmatmul", (n * nb, 2 * nf, b)),
-        ("pmatmul", (b, n * nb, 2 * nf)),
         ("pmatmul", (nb * nb, nf, b)),  # q = 1 synthesis
         ("freq_outer", (nf, 2 * n, nb)),
         ("freq_mat", (nf, 2 * n, nb, nb)),
     ]
+    if not forward_only:
+        jobs += [
+            # four-step vjp: dB = A^H @ g shapes from _cmm_bwd
+            ("cmatmul", (d1, n * d2, d1)),
+            ("cmatmul", (d2, n * d1, d2)),
+            # grouped block-DFT vjp pair
+            ("pmatmul", (n * nb, 2 * nf, b)),
+            ("pmatmul", (b, n * nb, 2 * nf)),
+        ]
     # distinct canonical shapes only (small d collapses several of these)
     seen, uniq = set(), []
     for kernel, shape in jobs:
@@ -107,6 +115,19 @@ def main(argv=None) -> int:
         "--block-size",
         type=int,
         help="grouped-regularizer b your training config uses (default: paper's 128)",
+    )
+    p.add_argument(
+        "--serve",
+        action="store_true",
+        help="pre-tune the SERVE bucket shapes instead: expand each (n, d) "
+        "into the micro-batcher's bucket ladder (align .. n rows, width d) "
+        "and tune forward-only (the inference probes never differentiate)",
+    )
+    p.add_argument(
+        "--serve-align",
+        type=int,
+        default=None,
+        help="bucket granularity for --serve (default: the f32 sublane tile)",
     )
     p.add_argument(
         "--data-parallel",
@@ -149,6 +170,18 @@ def main(argv=None) -> int:
         shapes.extend(arch_shapes(args.arch))
     if not shapes:
         p.error("nothing to tune: pass --arch and/or --shape NxD")
+    if args.serve:
+        # one job per (bucket, width): every compiled variant the serving
+        # engine's bucket ladder can dispatch, mirroring ServeEngine.warmup.
+        from repro.serve.buckets import BucketPolicy, bucket_shapes
+
+        expanded = []
+        for n, d in shapes:
+            policy = BucketPolicy(
+                max_batch=n, align=args.serve_align or BucketPolicy().align
+            )
+            expanded.extend(bucket_shapes(policy, d))
+        shapes = sorted(set(expanded))
     if args.data_parallel > 1 or args.model_parallel > 1:
         # mirror repro.decorr.warmup.shard_local_shape: model_parallel only
         # shrinks the rows the kernels see in the engine's tp mode.
@@ -182,7 +215,9 @@ def main(argv=None) -> int:
 
     n_jobs = 0
     for n, d in shapes:
-        plan_result, jobs = jobs_for(n, d, block_size=args.block_size, **tune_kw)
+        plan_result, jobs = jobs_for(
+            n, d, block_size=args.block_size, forward_only=args.serve, **tune_kw
+        )
         report(plan_result)
         n_jobs += 1
         for kernel, shape in jobs:

@@ -118,3 +118,47 @@ def test_with_retries_backoff():
 
     assert with_retries(flaky, max_retries=5, backoff_s=0.001)() == 42
     assert calls["n"] == 3
+
+
+def test_heartbeat_missed_detection():
+    """Missed-heartbeat detection with an injected clock (no sleeping)."""
+    from repro.ft import HeartbeatMonitor
+
+    t = {"now": 100.0}
+    hb = HeartbeatMonitor(default_timeout_s=2.0, clock=lambda: t["now"])
+    hb.register("serve.dispatch")
+    hb.register("ckpt.writer", timeout_s=10.0)
+
+    assert hb.stale() == {}
+    t["now"] = 103.0  # dispatch overdue (3s > 2s), writer fine (3s < 10s)
+    overdue = hb.stale()
+    assert list(overdue) == ["serve.dispatch"]
+    assert overdue["serve.dispatch"] == 3.0
+    assert hb.missed_events == 1
+    # still stale on re-check: edge-triggered counter does not double-count
+    hb.stale()
+    assert hb.missed_events == 1
+
+    hb.beat("serve.dispatch")
+    assert hb.stale() == {}
+    t["now"] = 106.5  # second miss -> second event
+    assert "serve.dispatch" in hb.stale()
+    assert hb.missed_events == 2
+
+    m = hb.metrics()
+    assert m["heartbeat_components"] == 2.0
+    assert m["heartbeat_stale"] == 1.0
+    assert m["heartbeat_missed_events"] == 2.0
+    assert m["heartbeat_age_s:serve.dispatch"] == 3.5
+
+
+def test_heartbeat_auto_registers_on_beat():
+    from repro.ft import HeartbeatMonitor
+
+    t = {"now": 0.0}
+    hb = HeartbeatMonitor(default_timeout_s=1.0, clock=lambda: t["now"])
+    hb.beat("adhoc")
+    t["now"] = 0.5
+    assert hb.stale() == {}
+    t["now"] = 2.0
+    assert "adhoc" in hb.stale()
