@@ -12,7 +12,6 @@ subsampled to keep the suite's wall time bounded.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import compiled_costs, fmt_row, sds, time_fn
 from repro import tune

@@ -15,7 +15,6 @@ The paper's claim: R_sum is O(nd log d) vs O(nd^2) — ratios grow with d.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import compiled_costs, fmt_row, sds, time_fn
 from repro.core import regularizers as regs

@@ -24,8 +24,11 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _BODY = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import json, time
-import jax, jax.numpy as jnp
+import json
+import time
+
+import jax
+import jax.numpy as jnp
 from functools import partial
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P

@@ -5,7 +5,6 @@ Pallas four-step kernel, Gram baseline — plus kernel timings."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import fmt_row, time_fn
 from repro.core import regularizers as regs

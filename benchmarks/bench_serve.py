@@ -1,7 +1,11 @@
-"""Serving policies: naive per-request vs dynamic micro-batching, on the
-ssl-paper reduced config.  Emits ``BENCH_serve.json`` (p50/p99 latency +
-throughput per policy, probe health, probe-vs-oracle agreement); CI gates
-that micro-batched throughput >= naive per-request throughput.
+"""Serving policies: (embedding path) naive per-request vs dynamic
+micro-batching on the ssl-paper reduced config, and (LM path) whole-request
+``greedy_generate`` vs continuous batching on a mixed-length workload.
+Emits ``BENCH_serve.json`` (p50/p99 latency + throughput per policy, probe
+health, probe-vs-oracle agreement); CI gates (``benchmarks/compare.py``)
+that micro-batched >= naive, continuous >= whole-request (identical tokens),
+probes match the training-path oracle, and neither speedup ratio regresses
+>20% against the committed baseline.
 """
 
 from __future__ import annotations
@@ -19,6 +23,8 @@ from benchmarks.common import fmt_row
 REDUCED = dict(input_dim=64, backbone=128, d=512)
 POLICY = dict(max_batch=64, max_wait_ms=2.0)
 N_REQUESTS = 512
+# LM continuous batching: small attention arch, mixed-length closed loop
+LM = dict(arch="gemma2-2b", n_requests=32, slots=8)
 
 
 def run():
@@ -60,12 +66,15 @@ def run():
         for k, v in oracle.items()
     )
 
+    lm_report = _run_lm_continuous()
+
     out = {
         "config": {
             **REDUCED,
             **POLICY,
             "n_requests": N_REQUESTS,
             "buckets": list(bucket_sizes(policy)),
+            "lm": LM,
         },
         "naive": report["naive"],
         "microbatch": report["microbatch"],
@@ -74,6 +83,7 @@ def run():
             **{k: v for k, v in report["service_metrics"].items() if k.startswith("decorr_")},
         },
         "gate": report["gate"],
+        "lm": lm_report,
     }
     with open(os.path.join(os.getcwd(), "BENCH_serve.json"), "w") as f:
         json.dump(out, f, indent=2, sort_keys=True, default=float)
@@ -91,7 +101,53 @@ def run():
         f"ok={report['gate']['microbatch_beats_naive']};"
         f"probe_oracle_rel_err={probe_err:.2e}",
     ))
+    for name in ("whole_request", "continuous"):
+        r = lm_report[name]
+        rows.append(fmt_row(
+            f"serve/lm_{name}", r["p50_ms"] * 1e3,
+            f"p99_ms={r['p99_ms']:.2f};tok_per_s={r['tok_per_s']:.0f}",
+        ))
+    g = lm_report["gate"]
+    rows.append(fmt_row(
+        "serve/gate_continuous_beats_whole_request", 0.0,
+        f"speedup={g['speedup']:.2f}x;ok={g['continuous_beats_whole_request']};"
+        f"token_mismatches={g['token_mismatches']:.0f};"
+        f"probe_oracle_rel_err={g.get('probe_oracle_rel_err', float('nan')):.2e};"
+        f"occupancy={lm_report['service_metrics']['slots_occupancy']:.2f}",
+    ))
     return rows
+
+
+def _run_lm_continuous():
+    """Whole-request vs continuous batching on a mixed-length LM workload
+    (the acceptance gate: interleaving must win throughput without changing
+    a single emitted token, with the in-flight probe oracle-exact)."""
+    from repro.configs import get_config
+    from repro.decorr.config import DecorrConfig
+    from repro.models import init_params
+    from repro.serve.loadgen import LMLoadConfig, compare_lm_policies
+
+    from repro.serve import DecorrProbe
+
+    cfg = get_config(LM["arch"]).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    load = LMLoadConfig(n_requests=LM["n_requests"])
+    report = compare_lm_policies(
+        cfg,
+        params,
+        load,
+        n_slots=LM["slots"],
+        probe_fn=lambda: DecorrProbe(DecorrConfig(style="vic", reg="sum", q=2)),
+        record_probe_rows=True,
+    )
+    keep = ("whole_request", "continuous", "gate")
+    out = {k: report[k] for k in keep}
+    out["service_metrics"] = {
+        k: v
+        for k, v in report["service_metrics"].items()
+        if k.startswith(("slots_", "ttft_", "decorr_")) or k in ("tok_per_s", "tokens_total")
+    }
+    return out
 
 
 if __name__ == "__main__":

@@ -10,7 +10,6 @@ bench_complexity)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import fmt_row, time_fn
 from repro.core import losses as L

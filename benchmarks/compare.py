@@ -1,0 +1,186 @@
+"""Bench-regression gate: current BENCH_*.json vs committed baselines.
+
+CI runs the bench suites, then::
+
+    PYTHONPATH=src python -m benchmarks.compare serve tune
+
+Two kinds of checks per suite:
+
+  * **hard gates** — absolute invariants that must hold on any machine
+    (micro-batching beats naive, continuous batching beats whole-request
+    with zero token mismatches, probes agree with the training-path oracle,
+    tuned kernel costs <= default);
+  * **baseline regression** — RATIO metrics (speedups, tuned/default cost
+    ratios) compared against ``benchmarks/baselines/BENCH_*.json``.  Ratios
+    are machine-portable where absolute throughput is not; a ratio more than
+    ``REL_TOL`` (20%) worse than the committed baseline fails the gate.
+
+``--write-baseline`` snapshots the current reports into the baselines dir
+(run locally, commit the result) after an intentional perf change.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+REL_TOL = 0.20
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "baselines")
+
+
+def _lookup(report: dict, path: str):
+    cur = report
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def _tune_ratio_metrics(report: dict) -> Dict[str, float]:
+    out = {}
+    for k in report.get("kernels", []):
+        name = f"{k['kernel']}{tuple(k['shape'])}"
+        out[f"{name}.flops_ratio"] = float(k["flops_ratio"])
+        out[f"{name}.bytes_ratio"] = float(k["bytes_ratio"])
+    return out
+
+
+# (path, predicate, description) hard gates per suite
+HARD_GATES = {
+    "serve": [
+        ("gate.microbatch_beats_naive", lambda v: bool(v), "micro-batched throughput >= naive"),
+        ("probe.oracle_rel_err", lambda v: v < 1e-3, "embedding probe matches training oracle"),
+        ("lm.gate.continuous_beats_whole_request", lambda v: bool(v),
+         "continuous-batching tok/s >= whole-request generate"),
+        ("lm.gate.token_mismatches", lambda v: v == 0,
+         "slot interleaving changes no request's tokens"),
+        ("lm.gate.probe_oracle_rel_err", lambda v: v < 1e-3,
+         "in-flight probe matches training oracle under interleaving"),
+    ],
+    "tune": [],  # per-kernel gates generated below
+}
+
+# suite -> (bench file, {metric name: (direction, dotted path)})
+#   direction: +1 higher is better (speedups), -1 lower is better (costs)
+RATIO_METRICS = {
+    "serve": {
+        "microbatch_speedup": (+1, "gate.speedup"),
+        "continuous_speedup": (+1, "lm.gate.speedup"),
+        "slot_occupancy": (+1, "lm.service_metrics.slots_occupancy"),
+    },
+    "tune": {},  # per-kernel ratios generated from the report
+}
+
+FILES = {"serve": "BENCH_serve.json", "tune": "BENCH_tune.json"}
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_suite(
+    suite: str, current: dict, baseline: dict | None
+) -> Tuple[List[str], List[str]]:
+    """Returns (failures, notes)."""
+    failures, notes = [], []
+
+    # hard gates
+    if suite == "tune":
+        for k in current.get("kernels", []):
+            name = f"{k['kernel']}{tuple(k['shape'])}"
+            for key in ("flops_ratio", "bytes_ratio"):
+                if float(k[key]) > 1.0:
+                    failures.append(f"[{suite}] tuned worse than default: {name}.{key}={k[key]:.3f}")
+    for path, pred, desc in HARD_GATES.get(suite, []):
+        v = _lookup(current, path)
+        if v is None:
+            failures.append(f"[{suite}] missing gate metric {path} ({desc})")
+        elif not pred(v):
+            failures.append(f"[{suite}] HARD gate failed: {desc} ({path}={v})")
+        else:
+            notes.append(f"[{suite}] ok: {desc} ({path}={v})")
+
+    # baseline ratio regression
+    if baseline is None:
+        notes.append(f"[{suite}] no baseline committed — regression check skipped")
+        return failures, notes
+    if suite == "tune":
+        cur_m = _tune_ratio_metrics(current)
+        base_m = _tune_ratio_metrics(baseline)
+        pairs = {name: (-1, cur_m[name], base_m.get(name)) for name in cur_m}
+    else:
+        pairs = {
+            name: (direction, _lookup(current, path), _lookup(baseline, path))
+            for name, (direction, path) in RATIO_METRICS[suite].items()
+        }
+    for name, (direction, cur, base) in pairs.items():
+        if cur is None or base is None or base == 0:
+            notes.append(f"[{suite}] {name}: not comparable (cur={cur}, base={base})")
+            continue
+        if direction > 0:
+            ok = cur >= base * (1.0 - REL_TOL)
+        else:
+            ok = cur <= base * (1.0 + REL_TOL)
+        line = f"{name}: current={cur:.3f} baseline={base:.3f} (tol {REL_TOL:.0%})"
+        if ok:
+            notes.append(f"[{suite}] ok: {line}")
+        else:
+            failures.append(f"[{suite}] REGRESSION >{REL_TOL:.0%}: {line}")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="benchmarks.compare", description=__doc__)
+    p.add_argument("suites", nargs="*", default=None,
+                   help="which suites to gate (default: all with a bench file present)")
+    p.add_argument("--current-dir", default=".",
+                   help="where the freshly produced BENCH_*.json live")
+    p.add_argument("--baseline-dir", default=BASELINE_DIR)
+    p.add_argument("--write-baseline", action="store_true",
+                   help="snapshot current reports as the new committed baselines")
+    args = p.parse_args(argv)
+
+    suites = args.suites or [s for s in FILES
+                             if os.path.exists(os.path.join(args.current_dir, FILES[s]))]
+    if not suites:
+        print("benchmarks.compare: no BENCH_*.json found; run `python -m benchmarks.run` first")
+        return 2
+
+    all_failures: List[str] = []
+    for suite in suites:
+        cur_path = os.path.join(args.current_dir, FILES[suite])
+        if not os.path.exists(cur_path):
+            all_failures.append(f"[{suite}] missing {cur_path}")
+            continue
+        current = _load(cur_path)
+        if args.write_baseline:
+            os.makedirs(args.baseline_dir, exist_ok=True)
+            dst = os.path.join(args.baseline_dir, FILES[suite])
+            with open(dst, "w") as f:
+                json.dump(current, f, indent=2, sort_keys=True)
+            print(f"[{suite}] baseline written: {dst}")
+            continue
+        base_path = os.path.join(args.baseline_dir, FILES[suite])
+        baseline = _load(base_path) if os.path.exists(base_path) else None
+        failures, notes = check_suite(suite, current, baseline)
+        for n in notes:
+            print(n)
+        for fail in failures:
+            print(fail, file=sys.stderr)
+        all_failures.extend(failures)
+
+    if all_failures:
+        print(f"\nbench gate FAILED ({len(all_failures)} violations)", file=sys.stderr)
+        return 1
+    if not args.write_baseline:
+        print("\nbench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,7 +25,7 @@ import json
 import os
 import re
 import shutil
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,7 @@ config.  ``get_config(name)`` / ``list_archs()`` are the public API;
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
 _ARCHS = {
     "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",

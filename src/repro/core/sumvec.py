@@ -23,7 +23,6 @@ bf16 accumulation destroys them); see DESIGN.md §6.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -12,10 +12,9 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Dict, Iterator, Optional
+from typing import Any, Iterator, Optional
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding
 
 

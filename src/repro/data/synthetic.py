@@ -14,10 +14,9 @@ with bit-identical batches.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 Array = jax.Array

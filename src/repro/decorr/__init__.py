@@ -21,11 +21,12 @@ from repro.decorr.engine import (
     variance_hinge,
     vicreg,
 )
-from repro.decorr.probe import probe_metrics
+from repro.decorr.probe import probe_metrics, slot_probe_rows
 from repro.decorr.warmup import shard_local_shape, warmup_tune_cache
 
 __all__ = [
     "probe_metrics",
+    "slot_probe_rows",
     "DecorrConfig",
     "apply",
     "barlow_twins",

@@ -30,11 +30,31 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.decorr import engine, modes
 from repro.decorr.config import DecorrConfig
 
 Array = jax.Array
+
+
+def slot_probe_rows(hidden, active) -> np.ndarray:
+    """Sample the in-flight slots' representation rows from one continuous-
+    batching decode step.
+
+    ``hidden``: (n_slots, d) final hidden states of the step (free-slot lanes
+    carry garbage — they decoded a masked dummy token); ``active``: the slot
+    indices that held live requests WHEN the step ran.  Returns the
+    (n_active, d) f32 rows in slot order — the stream ``serve.DecorrProbe``
+    buffers into its fixed probe windows, so probe readings only ever mix
+    representations of real, in-flight requests even while admission and
+    retirement interleave mid-stream.
+    """
+    rows = np.asarray(hidden, np.float32)
+    idx = np.asarray(list(active), np.int64)
+    if idx.size == 0:
+        return rows[:0]
+    return rows[idx]
 
 # r_off materializes d x d — beyond this width the probe auto-drops it and
 # relies on the O(n d log d) r_sum statistic alone.

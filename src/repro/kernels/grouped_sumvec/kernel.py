@@ -22,7 +22,6 @@ regularizer is systolic-array work; no vector-unit FFT is involved.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

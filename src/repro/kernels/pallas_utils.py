@@ -14,7 +14,6 @@ on a real TPU the same code lowers to Mosaic.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -14,10 +14,9 @@ meshes; nothing is ever allocated — inputs are ShapeDtypeStructs.
 
 import argparse  # noqa: E402
 import json  # noqa: E402
-import re  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
-from typing import Dict, Optional  # noqa: E402
+from typing import Dict  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -25,7 +24,6 @@ import jax.numpy as jnp  # noqa: E402
 from repro.configs import get_config, list_archs  # noqa: E402
 from repro.launch import specs as S  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.models.transformer import forward  # noqa: E402
 from repro.optim import adamw, warmup_cosine  # noqa: E402
 from repro.parallel.sharding import sharding_context  # noqa: E402
 from repro.train.serve import make_decode_step, make_prefill_step  # noqa: E402
@@ -205,12 +203,14 @@ def main():
                     print(f"[cached] {arch} {shape} {mesh_name}")
                     continue
                 rec = run_cell(arch, shape, multi)
-                line = {k: rec.get(k) for k in ("arch", "shape", "mesh", "status", "lower_s", "compile_s", "flops", "error")}
+                keys = ("arch", "shape", "mesh", "status", "lower_s", "compile_s", "flops", "error")
+                line = {k: rec.get(k) for k in keys}
                 print(json.dumps(line), flush=True)
                 if rec.get("status") == "ok":
                     print("  memory:", rec["memory"])
                     print("  collectives:", {k: f"{v:.3g}" for k, v in rec["collectives"].items()})
-                    print("  roofline:", {k: (f"{v:.3g}" if isinstance(v, float) else v) for k, v in rec["roofline"].items()})
+                    roof = {k: (f"{v:.3g}" if isinstance(v, float) else v) for k, v in rec["roofline"].items()}
+                    print("  roofline:", roof)
                 if out_path:
                     with open(out_path, "w") as f:
                         json.dump(rec, f, indent=1)

@@ -15,7 +15,7 @@ import argparse  # noqa: E402
 import dataclasses  # noqa: E402
 import json  # noqa: E402
 import time  # noqa: E402
-from typing import Callable, Dict, Optional  # noqa: E402
+from typing import Dict, Optional  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402

@@ -8,8 +8,7 @@ batches are all ``jax.ShapeDtypeStruct`` stand-ins carrying NamedShardings.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -124,7 +123,6 @@ def param_spec(path, leaf) -> P:
 
 
 def _divisible(shape, spec: P, mesh: Mesh) -> bool:
-    import numpy as np
 
     parts = tuple(spec) + (None,) * (len(shape) - len(spec))
     for dim, part in zip(shape, parts):
@@ -193,7 +191,11 @@ def batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> Dict[str, Any]
     if cfg.frontend == "vision_stub":
         return {
             "embeds": sds((b, s, cfg.d_model), jnp.bfloat16, sharding=_batch_spec(mesh, b, (None, None))),
-            "positions": sds((3, b, s), jnp.int32, sharding=NamedSharding(mesh, P(None, _batch_axes(mesh) or None, None))),
+            "positions": sds(
+                (3, b, s),
+                jnp.int32,
+                sharding=NamedSharding(mesh, P(None, _batch_axes(mesh) or None, None)),
+            ),
             "labels": sds((b, s), jnp.int32, sharding=_batch_spec(mesh, b, (None,))),
         }
     if cfg.frontend == "audio_codes":
@@ -212,7 +214,11 @@ def decode_token_specs(cfg: ArchConfig, batch: int, mesh: Mesh) -> Dict[str, Any
     if cfg.frontend == "vision_stub":
         return {
             "embeds": sds((batch, 1, cfg.d_model), jnp.bfloat16, sharding=_batch_spec(mesh, batch, (None, None))),
-            "positions": sds((3, batch, 1), jnp.int32, sharding=NamedSharding(mesh, P(None, _batch_axes(mesh) or None, None))),
+            "positions": sds(
+                (3, batch, 1),
+                jnp.int32,
+                sharding=NamedSharding(mesh, P(None, _batch_axes(mesh) or None, None)),
+            ),
         }
     if cfg.frontend == "audio_codes":
         return {"tokens": sds((batch, 1, cfg.n_codebooks), jnp.int32, sharding=_batch_spec(mesh, batch, (None, None)))}

@@ -23,7 +23,6 @@ from repro.core.losses import DecorrConfig
 from repro.data import LMDataConfig, lm_batch
 from repro.models import init_params
 from repro.optim import adamw, warmup_cosine
-from repro.parallel.sharding import sharding_context
 from repro.train import LoopConfig, create_train_state, make_train_step, run_training
 
 

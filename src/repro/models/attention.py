@@ -242,7 +242,9 @@ def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Array]
 
 
 def _decode_attention(q, cache_k, cache_v, cache_len, cfg: ArchConfig, spec: BlockSpec):
-    """q: (B, 1, H, hd); cache_(k|v): (B, L, KV, hd); cache_len: scalar."""
+    """q: (B, 1, H, hd); cache_(k|v): (B, L, KV, hd); cache_len: scalar or (B,)
+    per-row lengths (continuous batching: each slot decodes at its own
+    position)."""
     b, _, h, hd = q.shape
     scale = cfg.attn_scale or (1.0 / math.sqrt(hd))
     k = _repeat_kv(cache_k, h // cache_k.shape[2])
@@ -250,9 +252,10 @@ def _decode_attention(q, cache_k, cache_v, cache_len, cfg: ArchConfig, spec: Blo
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
     scores = softcap(scores, cfg.attn_softcap)
     ki = jnp.arange(k.shape[1])[None, None, None, :]
-    mask = ki < cache_len
+    cl = cache_len if jnp.ndim(cache_len) == 0 else cache_len.reshape(b, 1, 1, 1)
+    mask = ki < cl
     if spec.attn_type == "local":
-        mask &= ki >= cache_len - cfg.window_size
+        mask &= ki >= cl - cfg.window_size
     scores = jnp.where(mask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
@@ -285,8 +288,14 @@ def attn_apply(
     new_cache = None
     if cache is not None:
         if s == 1:
-            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_len, axis=1)
-            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_len, axis=1)
+            if jnp.ndim(cache_len) == 1:
+                # per-slot decode: row i writes its token at its own position
+                rows = jnp.arange(b)
+                ck = cache["k"].at[rows, cache_len].set(k[:, 0])
+                cv = cache["v"].at[rows, cache_len].set(v[:, 0])
+            else:
+                ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_len, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_len, axis=1)
             ck = shard(ck, ("batch", "kv_seq", None, None))
             cv = shard(cv, ("batch", "kv_seq", None, None))
             new_cache = {"k": ck, "v": cv}

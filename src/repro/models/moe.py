@@ -37,7 +37,8 @@ def moe_init(key: Array, cfg: ArchConfig) -> Dict[str, Array]:
         "w_out": dense_init(ks[2], ff, d, cfg.param_dtype) * jnp.ones((e, 1, 1), cfg.param_dtype),
     }
     # break expert symmetry
-    params["w_in"] = params["w_in"] + 0.02 * jax.random.normal(ks[3], params["w_in"].shape, jnp.float32).astype(cfg.param_dtype) / jnp.sqrt(d).astype(cfg.param_dtype)
+    noise = jax.random.normal(ks[3], params["w_in"].shape, jnp.float32).astype(cfg.param_dtype)
+    params["w_in"] = params["w_in"] + 0.02 * noise / jnp.sqrt(d).astype(cfg.param_dtype)
     if gated:
         params["w_gate"] = dense_init(ks[4], d, ff, cfg.param_dtype) * jnp.ones((e, 1, 1), cfg.param_dtype)
     if cfg.dense_residual:

@@ -18,7 +18,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import ArchConfig, dense_init
-from repro.parallel.sharding import shard
 
 Array = jax.Array
 

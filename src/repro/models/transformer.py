@@ -234,9 +234,11 @@ def forward(
     b, s, _ = x.shape
 
     if positions is None:
-        base = jnp.arange(s, dtype=jnp.int32)[None, :] + (
-            cache_len if cache_len is not None else 0
-        )
+        off = 0
+        if cache_len is not None:
+            # scalar (whole-batch) or (B,) per-slot decode positions
+            off = cache_len[:, None] if jnp.ndim(cache_len) == 1 else cache_len
+        base = jnp.arange(s, dtype=jnp.int32)[None, :] + off
         positions = jnp.broadcast_to(base, (b, s))
         if cfg.mrope:
             positions = jnp.broadcast_to(positions[None], (3, b, s))

@@ -14,7 +14,7 @@ chooses the dtype of the collective):
 
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

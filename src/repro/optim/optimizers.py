@@ -16,7 +16,7 @@ lr) -> (new_params, new_state)``.  All pure pytree maps — shard-agnostic
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -8,13 +8,19 @@ Layers (one module each):
                    max-latency/max-batch coalescing + backpressure;
   * ``engine``   — ``ServeEngine``: per-bucket jit cache over the SSL
                    encoder+projector, ``repro.checkpoint`` loading, optional
-                   shard_map execution; ``LMServeEngine`` for token models;
+                   shard_map execution; ``LMServeEngine`` (whole-request) and
+                   ``ContinuousLMEngine`` (slot-pool continuous batching) for
+                   token models;
+  * ``slots``    — decode-step-granular slot pool (``SlotPool`` /
+                   ``LMRequest``): free-list admission, per-slot positions,
+                   occupancy accounting for continuous batching;
   * ``probes``   — ``DecorrProbe``: streaming (EMA) feature moments + the
                    training-oracle-exact R_off/R_sum health metrics via
                    ``repro.decorr.probe_metrics``;
-  * ``service``  — ``EmbeddingService``: dispatch loop wiring batcher,
-                   engine, probe, latency stats and the ``repro.ft``
-                   heartbeat into one scrapeable object;
+  * ``service``  — ``EmbeddingService`` / ``LMService``: dispatch loops
+                   wiring batcher, engine, probe, latency stats and the
+                   ``repro.ft`` heartbeat into one scrapeable object (the LM
+                   loop ticks per decode step: admit, decode, retire);
   * ``loadgen``  — deterministic load generation + naive-vs-micro-batched
                    policy comparison (the bench/CLI core);
   * ``common``   — shared token-model helpers (prompt construction,
@@ -30,24 +36,38 @@ Layers (one module each):
 
 from repro.serve.batcher import Backpressure, MicroBatcher, ServeFuture
 from repro.serve.buckets import BucketPolicy, bucket_for, bucket_shapes, bucket_sizes
-from repro.serve.engine import LMServeEngine, ServeEngine
-from repro.serve.loadgen import LoadConfig, compare_policies, run_microbatched, run_naive
+from repro.serve.engine import ContinuousLMEngine, LMServeEngine, ServeEngine
+from repro.serve.loadgen import (
+    LMLoadConfig,
+    LoadConfig,
+    compare_lm_policies,
+    compare_policies,
+    run_microbatched,
+    run_naive,
+)
 from repro.serve.probes import DecorrProbe
-from repro.serve.service import EmbeddingService
+from repro.serve.service import EmbeddingService, LMService
+from repro.serve.slots import LMRequest, SlotPool
 
 __all__ = [
     "Backpressure",
     "BucketPolicy",
+    "ContinuousLMEngine",
     "DecorrProbe",
     "EmbeddingService",
+    "LMLoadConfig",
+    "LMRequest",
     "LMServeEngine",
+    "LMService",
     "LoadConfig",
     "MicroBatcher",
     "ServeEngine",
     "ServeFuture",
+    "SlotPool",
     "bucket_for",
     "bucket_shapes",
     "bucket_sizes",
+    "compare_lm_policies",
     "compare_policies",
     "run_microbatched",
     "run_naive",

@@ -59,7 +59,12 @@ class ServeFuture:
 
 
 class Request:
-    """One queued request: the input row(s) plus its future."""
+    """One queued request: the payload plus its future.
+
+    The payload is opaque to the batcher — embedding traffic queues input
+    row arrays (coalesced by ``rows``), LM traffic queues
+    ``repro.serve.slots.LMRequest`` prompts (each counts as one row; slot
+    admission pops them with ``next_requests``)."""
 
     __slots__ = ("x", "future")
 
@@ -145,4 +150,30 @@ class MicroBatcher:
                 break
             batch.append(nxt)
             rows += nxt.rows
+        return batch
+
+    def next_requests(self, max_n: int, timeout: Optional[float] = None) -> Optional[List[Request]]:
+        """Pop up to ``max_n`` whole requests — continuous-batching
+        admission: a freed decode slot takes the next queued request NOW, it
+        never waits to coalesce a full batch (``max_wait_ms`` is a coalescing
+        knob and does not apply).  Returns [] when nothing is queued within
+        ``timeout`` (or ``max_n == 0``) and None once ``shutdown`` was called
+        and the queue has drained."""
+        if max_n <= 0:
+            return None if self._shutdown.is_set() and self._q.empty() else []
+        try:
+            first = self._q.get(block=timeout != 0.0, timeout=timeout)
+        except queue.Empty:
+            return None if self._shutdown.is_set() else []
+        if first is _SHUTDOWN:
+            return None if self._q.empty() else []
+        batch = [first]
+        while len(batch) < max_n:
+            try:
+                nxt = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if nxt is _SHUTDOWN:
+                break
+            batch.append(nxt)
         return batch

@@ -11,6 +11,9 @@ scrape metrics.
     # token-model serving demo (prefill/decode path, shared helpers)
     PYTHONPATH=src python -m repro.serve.cli --lm-arch rwkv6-3b
 
+    # continuous batching vs whole-request generate + probe oracle gate (CI)
+    PYTHONPATH=src python -m repro.serve.cli --smoke --lm-arch gemma2-2b --continuous
+
 ``--pretune`` warms the repro.tune cache for the serve bucket shapes first —
 the same job list ``python -m repro.tune.cli --serve`` persists offline.
 """
@@ -116,6 +119,8 @@ def _run_lm(args) -> int:
 
     cfg = get_config(args.lm_arch).reduced()
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    if args.continuous:
+        return _run_lm_continuous(args, cfg, params)
     engine = LMServeEngine(cfg)
     prompt = make_prompt(cfg, jax.random.PRNGKey(args.seed + 1), args.max_batch, args.prompt_len)
     out, stats = timed_generate(
@@ -128,6 +133,56 @@ def _run_lm(args) -> int:
     )
     print("sample:", out[0].tolist()[:8])
     return 0
+
+
+def _run_lm_continuous(args, cfg, params) -> int:
+    """Continuous batching vs whole-request generate on a mixed-length
+    workload, with the in-flight decorrelation probe replayed against the
+    offline oracle."""
+    from repro.decorr.config import DecorrConfig
+    from repro.serve.loadgen import LMLoadConfig, compare_lm_policies
+    from repro.serve.probes import DecorrProbe
+
+    load = LMLoadConfig(n_requests=args.requests, seed=args.seed)
+    probe_cfg = DecorrConfig(style=args.probe_style, reg="sum", q=2, block_size=args.probe_block)
+    report = compare_lm_policies(
+        cfg,
+        params,
+        load,
+        n_slots=args.slots,
+        probe_fn=lambda: DecorrProbe(probe_cfg),
+        record_probe_rows=True,
+    )
+    for name in ("whole_request", "continuous"):
+        r = report[name]
+        print(
+            f"[serve] {name:>14}: p50={r['p50_ms']:.2f}ms p99={r['p99_ms']:.2f}ms "
+            f"{r['tok_per_s']:.0f} tok/s ({r['requests']:.0f} requests)"
+        )
+    g = report["gate"]
+    m = report["service_metrics"]
+    print(
+        f"[serve] continuous-batching speedup: {g['speedup']:.2f}x "
+        f"(beats whole-request: {g['continuous_beats_whole_request']}, "
+        f"token mismatches: {g['token_mismatches']:.0f})"
+    )
+    print(
+        f"[serve] occupancy={m['slots_occupancy']:.2f} "
+        f"ttft_p50={m['ttft_p50_ms']:.2f}ms probe_steps={m.get('decorr_probe_steps', 0):.0f} "
+        f"probe_oracle_rel_err={g.get('probe_oracle_rel_err', float('nan')):.2e}"
+    )
+    if args.json:
+        print(json.dumps(report, indent=2, sort_keys=True, default=float))
+    # fail-closed like benchmarks/compare.py: a probe that never fired a
+    # full window means the oracle check did NOT run — that fails the gate
+    probe_err = g.get("probe_oracle_rel_err")
+    ok = (
+        g["continuous_beats_whole_request"]
+        and g["token_mismatches"] == 0
+        and probe_err is not None
+        and probe_err < 1e-3
+    )
+    return 0 if ok or not args.gate else 1
 
 
 def main(argv=None) -> int:
@@ -159,6 +214,11 @@ def main(argv=None) -> int:
                    help="serve a token model instead (e.g. rwkv6-3b, gemma2-2b)")
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--new-tokens", type=int, default=8)
+    p.add_argument("--continuous", action="store_true",
+                   help="with --lm-arch: continuous batching vs whole-request "
+                        "generate on a mixed-length workload")
+    p.add_argument("--slots", type=int, default=8,
+                   help="continuous-batching decode slot pool size")
     args = p.parse_args(argv)
 
     if args.smoke:
@@ -166,6 +226,8 @@ def main(argv=None) -> int:
         args.input_dim, args.backbone, args.d = 32, 64, 256
         args.max_batch = min(args.max_batch, 32)
         args.gate = True
+        if args.lm_arch and args.continuous:
+            args.requests = min(args.requests, 24)
 
     if args.lm_arch:
         return _run_lm(args)

@@ -22,6 +22,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -186,3 +187,185 @@ class LMServeEngine:
         return greedy_generate(
             params, self.cfg, prompt_tokens, max_new_tokens, steps=self.steps
         )
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: decode-step-granular slot scheduling
+# ---------------------------------------------------------------------------
+
+
+class ContinuousLMEngine:
+    """Continuous-batching LM engine over a fixed pool of decode slots.
+
+    Instead of whole-request ``generate`` calls (the batch drains only when
+    its longest request finishes), the pool's N slots all advance one token
+    per ``decode_step`` — with a *vector* ``cache_len``, each slot at its own
+    position — and a freed slot admits the next queued request on the very
+    next step via ``insert`` (prefill the prompt at batch 1, scatter its
+    KV/SSM state into the slot's row of the cache pool).
+
+    Compile discipline mirrors ``ServeEngine``: prompts are right-padded to a
+    geometric length ladder (``prompt_bucket_sizes``) so prefill compiles
+    once per bucket, decode compiles ONCE for the whole pool, and ``warmup``
+    AOT-compiles all of it so no request pays a trace.  Right-padding is only
+    numerics-safe for attention patterns (causality masks the pad rows);
+    recurrent mixers (SSM/RWKV) fold padding into their state, so those archs
+    prefill at the exact prompt length — one compile per distinct length
+    actually served.
+
+    The decode step also returns the final hidden state of each slot's new
+    token; the service samples the in-flight rows from it for the online
+    decorrelation probes (``repro.decorr.probe.slot_probe_rows``).
+    """
+
+    def __init__(
+        self,
+        arch_cfg,
+        params,
+        *,
+        n_slots: int = 8,
+        max_len: int = 128,
+        max_prompt_len: Optional[int] = None,
+        prompt_align: int = 8,
+        reset_on_retire: bool = True,
+    ):
+        from repro.models.transformer import init_caches
+        from repro.serve.slots import SlotPool
+        from repro.train.serve import (
+            insert_slot_state,
+            make_decode_step,
+            make_prefill_at_step,
+            reset_slot_state,
+        )
+
+        if arch_cfg.frontend == "audio_codes":
+            raise NotImplementedError(
+                "continuous batching serves flat token streams; audio-code "
+                "models ((B, S, n_q) tokens) go through LMServeEngine.generate"
+            )
+        self.cfg = arch_cfg
+        self.params = params
+        self.pool = SlotPool(n_slots, max_len)
+        self.reset_on_retire = reset_on_retire
+        # right-padded prompt buckets only where causality hides the padding
+        self.pad_prompts = all(spec.mixer == "attn" for spec in arch_cfg.pattern)
+        max_prompt = int(max_prompt_len or max(max_len // 2, prompt_align))
+        if max_prompt >= max_len:
+            raise ValueError(f"max_prompt_len={max_prompt} must leave decode room (< max_len={max_len})")
+        self._prompt_policy = BucketPolicy(max_batch=max_prompt, align=prompt_align, max_wait_ms=0.0)
+        if self.pad_prompts and bucket_sizes(self._prompt_policy)[-1] > max_len:
+            # the ladder rounds max_prompt_len UP to the alignment: a padded
+            # prefill of the top bucket must still fit the slot's cache rows
+            raise ValueError(
+                f"padded prompt bucket {bucket_sizes(self._prompt_policy)[-1]} "
+                f"(max_prompt_len={max_prompt} rounded up to align={prompt_align}) "
+                f"exceeds max_len={max_len}; lower max_prompt_len or raise max_len"
+            )
+
+        self.caches = init_caches(arch_cfg, n_slots, max_len)
+        self._caches1 = init_caches(arch_cfg, 1, max_len)  # prefill template
+
+        decode = make_decode_step(arch_cfg, return_hidden=True)
+
+        def _step(params, caches, cache_len, tokens):
+            logits, hidden, caches = decode(params, caches, cache_len, tokens=tokens[:, None])
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), hidden, caches
+
+        prefill_at = make_prefill_at_step(arch_cfg)
+
+        def _pre(params, caches1, tokens, true_len):
+            logits, hidden, caches1 = prefill_at(params, caches1, tokens, true_len)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), hidden, caches1
+
+        # one decode executable for the whole pool; prefill one per bucket
+        # (the jit caches below ARE the AOT cache `warmup` fills)
+        self._decode = jax.jit(_step, donate_argnums=(1,))
+        self._prefill = jax.jit(_pre)
+        self._insert = jax.jit(insert_slot_state, donate_argnums=(0,))
+        self._reset = jax.jit(reset_slot_state, donate_argnums=(0,))
+
+    # -- admission-side shape policy ----------------------------------------
+
+    def prompt_bucket_sizes(self) -> Tuple[int, ...]:
+        return bucket_sizes(self._prompt_policy)
+
+    @property
+    def max_prompt_len(self) -> int:
+        return self.prompt_bucket_sizes()[-1]
+
+    def _prompt_bucket(self, n: int) -> int:
+        return bucket_for(n, self._prompt_policy) if self.pad_prompts else n
+
+    def validate_request(self, prompt_len: int, max_new_tokens: int):
+        """Submit-time admission check: reject (never hang) what cannot be
+        scheduled — empty prompts, prompts beyond the largest bucket, and
+        requests that cannot fit the slot's cache rows."""
+        if prompt_len < 1:
+            raise ValueError("empty prompt: prompt_len must be >= 1")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if prompt_len > self.max_prompt_len:
+            raise ValueError(
+                f"prompt_len={prompt_len} exceeds the largest prompt bucket "
+                f"({self.max_prompt_len}); rejecting instead of queueing unservable work"
+            )
+        if prompt_len + max_new_tokens > self.pool.max_len:
+            raise ValueError(
+                f"prompt_len + max_new_tokens = {prompt_len + max_new_tokens} "
+                f"exceeds the slot cache ({self.pool.max_len} rows)"
+            )
+
+    # -- compile cache -------------------------------------------------------
+
+    def warmup(self, prompt_lens=None) -> Tuple[int, ...]:
+        """AOT-compile every prompt-bucket prefill variant, the pool decode
+        step, and the slot insert/reset — so no admitted request traces.
+
+        Attention-only patterns warm the whole padded bucket ladder.
+        Recurrent patterns prefill at exact lengths, so callers that know
+        their workload pass ``prompt_lens`` (distinct lengths to warm);
+        unknown lengths still compile lazily at admission."""
+        if self.pad_prompts:
+            buckets = self.prompt_bucket_sizes()
+        else:
+            buckets = tuple(sorted(set(int(n) for n in prompt_lens or ())) or (1,))
+        for length in buckets:
+            toks = jnp.zeros((1, length), jnp.int32)
+            _, _, one = self._prefill(self.params, self._caches1, toks, np.int32(1))
+        self.caches = self._insert(self.caches, one, np.int32(0))
+        lens = jnp.zeros((self.pool.n_slots,), jnp.int32)
+        toks = jnp.zeros((self.pool.n_slots,), jnp.int32)
+        _, _, self.caches = self._decode(self.params, self.caches, lens, toks)
+        self.caches = self._reset(self.caches, np.int32(0))
+        return buckets
+
+    # -- slot mechanics ------------------------------------------------------
+
+    def insert(self, slot) -> Tuple[int, np.ndarray]:
+        """Prefill an admitted request and scatter its state into the slot.
+        Returns (first generated token, its hidden-state row (1, d_model)) —
+        the prefill already emits the request's first token (TTFT point)."""
+        req = slot.request
+        n = req.prompt_len
+        length = self._prompt_bucket(n)
+        padded = np.zeros((1, length), np.int32)
+        padded[0, :n] = np.asarray(req.tokens, np.int32)
+        tok, hidden, one = self._prefill(
+            self.params, self._caches1, jnp.asarray(padded), np.int32(n)
+        )
+        self.caches = self._insert(self.caches, one, np.int32(slot.index))
+        return int(tok[0]), np.asarray(hidden, np.float32)
+
+    def decode_step(self) -> Tuple[np.ndarray, np.ndarray]:
+        """One batched decode over the whole pool.  Returns (next token per
+        slot (N,), hidden rows (N, d_model)); free-slot lanes are garbage the
+        caller must mask by the pool's active indices."""
+        lens = jnp.asarray(self.pool.cache_lens())
+        toks = jnp.asarray(self.pool.last_tokens())
+        next_tok, hidden, self.caches = self._decode(self.params, self.caches, lens, toks)
+        return np.asarray(next_tok), np.asarray(hidden, np.float32)
+
+    def release(self, index: int):
+        """Zero a retired slot's cache rows (hygiene; decode masks them)."""
+        if self.reset_on_retire:
+            self.caches = self._reset(self.caches, np.int32(index))

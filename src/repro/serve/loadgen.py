@@ -1,23 +1,32 @@
-"""Load generator + policy comparison for the embedding service.
+"""Load generators + policy comparisons for the serving subsystem.
 
 Deterministic synthetic traffic (seeded inputs, seeded exponential
-inter-arrivals) driven through two serving policies:
+inter-arrivals) driven through competing serving policies:
+
+Embedding path (``compare_policies``):
 
   * ``naive``       — one engine call per request, no coalescing: the
     baseline ``launch/serve.py``-style loop every request pays alone;
   * ``microbatch``  — requests submitted to the ``EmbeddingService`` and
     coalesced by the admission policy into bucketed batches.
 
-Both report per-request p50/p99 latency and sustained throughput; the bench
+LM path (``compare_lm_policies``), on a mixed-length workload:
+
+  * ``whole_request`` — PR 3's ``LMServeEngine.generate`` loop: each request
+    generates end-to-end on its own before the next one starts;
+  * ``continuous``    — the same requests through ``LMService`` /
+    ``ContinuousLMEngine``: slot-pool decode-step interleaving.
+
+All report per-request p50/p99 latency and sustained throughput; the bench
 harness (``benchmarks/bench_serve.py``) and the CLI smoke
-(``python -m repro.serve.cli``) are thin wrappers over ``compare_policies``.
+(``python -m repro.serve.cli``) are thin wrappers over these.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -122,3 +131,168 @@ def compare_policies(
         "speedup": micro["throughput_rps"] / max(naive["throughput_rps"], 1e-9),
     }
     return out
+
+
+# ---------------------------------------------------------------------------
+# LM path: whole-request generate vs continuous batching
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LMLoadConfig:
+    """Mixed-length LM workload: request i draws its prompt length and token
+    budget round-robin from the ladders below (deterministic given seed)."""
+
+    n_requests: int = 24
+    prompt_lens: Tuple[int, ...] = (4, 8, 14, 24)
+    new_tokens: Tuple[int, ...] = (4, 12, 20)
+    seed: int = 0
+
+    def request_stream(self, vocab_size: int) -> List[Tuple[np.ndarray, int]]:
+        rng = np.random.default_rng(self.seed)
+        out = []
+        for i in range(self.n_requests):
+            s = self.prompt_lens[i % len(self.prompt_lens)]
+            m = self.new_tokens[(i // len(self.prompt_lens)) % len(self.new_tokens)]
+            out.append((rng.integers(0, vocab_size, size=s).astype(np.int32), int(m)))
+        return out
+
+    @property
+    def max_request_len(self) -> int:
+        return max(self.prompt_lens) + max(self.new_tokens)
+
+
+def _lm_summary(latencies_s: List[float], tokens: int, wall_s: float) -> Dict[str, float]:
+    out = _summary(latencies_s, wall_s)
+    out["tokens"] = float(tokens)
+    out["tok_per_s"] = tokens / max(wall_s, 1e-9)
+    return out
+
+
+def run_whole_request(
+    engine, params, load: LMLoadConfig, max_len: int
+) -> Tuple[Dict[str, float], List[np.ndarray]]:
+    """The PR 3 LM serving regime: each request runs ``greedy_generate`` to
+    completion (batch 1) before the next starts.  ``max_len`` is pinned for
+    every request so the decode step compiles once (same cache shape the
+    continuous engine uses); a full untimed pass warms all prompt shapes."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.train.serve import greedy_generate
+
+    stream = load.request_stream(engine.cfg.vocab_size)
+
+    def one(tokens: np.ndarray, max_new: int):
+        return greedy_generate(
+            params, engine.cfg, jnp.asarray(tokens[None]), max_new,
+            max_len=max_len, steps=engine.steps,
+        )
+
+    for tokens, max_new in stream:  # warm every (prompt_len,) prefill variant
+        jax.block_until_ready(one(tokens, max_new))
+    lat, outs, n_tok = [], [], 0
+    t_run = time.perf_counter()
+    for tokens, max_new in stream:
+        t0 = time.perf_counter()
+        out = one(tokens, max_new)
+        jax.block_until_ready(out)
+        lat.append(time.perf_counter() - t0)
+        outs.append(np.asarray(out[0]))
+        n_tok += int(out.shape[1])
+    return _lm_summary(lat, n_tok, time.perf_counter() - t_run), outs
+
+
+def run_continuous(service, load: LMLoadConfig, timeout_s: float = 300.0):
+    """The same workload through the continuous-batching service: all
+    requests submitted up front (closed-loop burst), drained by synchronous
+    decode-step ticks.  Returns (summary, per-request outputs)."""
+    stream = load.request_stream(service.engine.cfg.vocab_size)
+    service.warmup(prompt_lens=[t.shape[0] for t, _ in stream])
+    futures = []
+    t_run = time.perf_counter()
+    for tokens, max_new in stream:
+        futures.append(service.submit(tokens, max_new, block=True, timeout=timeout_s))
+    service.drain()
+    outs = [f.result(timeout=timeout_s) for f in futures]
+    wall = time.perf_counter() - t_run
+    n_tok = sum(len(o) for o in outs)
+    return _lm_summary([f.latency_s for f in futures], n_tok, wall), outs
+
+
+def compare_lm_policies(
+    arch_cfg,
+    params,
+    load: LMLoadConfig,
+    *,
+    n_slots: int = 8,
+    max_len: Optional[int] = None,
+    probe_fn=None,
+    record_probe_rows: bool = False,
+) -> Dict[str, Dict[str, float]]:
+    """Whole-request generate vs continuous batching on one mixed-length
+    workload.  Also cross-checks correctness: both policies must emit
+    IDENTICAL token streams per request (greedy decoding is deterministic;
+    slot interleaving must not change any request's result)."""
+    from repro.serve.engine import ContinuousLMEngine, LMServeEngine
+    from repro.serve.service import LMService
+
+    max_len = int(max_len or max(load.max_request_len + 8, 32))
+    whole_engine = LMServeEngine(arch_cfg)
+    whole, whole_outs = run_whole_request(whole_engine, params, load, max_len)
+
+    engine = ContinuousLMEngine(
+        arch_cfg, params, n_slots=n_slots, max_len=max_len,
+        max_prompt_len=max(load.prompt_lens),
+    )
+    probe = probe_fn() if probe_fn is not None else None
+    service = LMService(engine, probe=probe, record_probe_rows=record_probe_rows)
+    cont, cont_outs = run_continuous(service, load)
+    metrics = service.metrics()
+
+    mismatches = sum(
+        1 for a, b in zip(whole_outs, cont_outs) if not np.array_equal(a, b)
+    )
+    out = {
+        "whole_request": whole,
+        "continuous": cont,
+        "service_metrics": metrics,
+        "gate": {
+            "continuous_beats_whole_request": cont["tok_per_s"] >= whole["tok_per_s"],
+            "speedup": cont["tok_per_s"] / max(whole["tok_per_s"], 1e-9),
+            "token_mismatches": float(mismatches),
+        },
+    }
+    if record_probe_rows:
+        err = lm_probe_oracle_err(service)
+        if err is not None:
+            out["gate"]["probe_oracle_rel_err"] = err
+    return out
+
+
+def lm_probe_oracle_err(service) -> Optional[float]:
+    """Replay the last full probe window against the offline training-path
+    oracle (``decorr.probe_metrics`` with the same step-folded permutation
+    key).  Requires ``record_probe_rows=True`` and a fired probe; returns the
+    max relative error across all exported metrics, or None."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.decorr.probe import probe_metrics
+
+    probe = service.probe
+    if probe is None or probe.steps == 0 or not service.probe_rows:
+        return None
+    w = probe.sample_rows
+    flat = np.concatenate(service.probe_rows, axis=0)
+    step = probe.steps - 1
+    window = flat[step * w : (step + 1) * w]
+    key = jax.random.fold_in(probe._seed_key, jnp.uint32(step))
+    oracle = probe_metrics(
+        jnp.asarray(window), cfg=probe.cfg, perm_key=key, include_off=probe._include_off
+    )
+    got = probe.metrics()
+    return max(
+        abs(got[f"decorr_{k}"] - float(v)) / max(abs(float(v)), 1e-6)
+        for k, v in oracle.items()
+    )

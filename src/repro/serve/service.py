@@ -1,12 +1,21 @@
-"""The embedding service: batcher + engine + probes + liveness, one object.
+"""The serving services: batcher + engine + probes + liveness, one object.
 
-``EmbeddingService`` runs the dispatch loop — pop a coalesced batch from the
-``MicroBatcher``, pad-and-encode through the ``ServeEngine``, fan results
-back out to the request futures, feed the ``DecorrProbe`` and the
-``repro.ft`` heartbeat — either on a background thread (``start``/``stop``,
-the production shape) or synchronously (``run_pending``, what tests and the
-closed-loop benchmark drive).  ``metrics()`` is the scrape surface: latency
-percentiles, throughput, queue depth, batch-shape histogram, probe health,
+``EmbeddingService`` runs the embedding dispatch loop — pop a coalesced
+batch from the ``MicroBatcher``, pad-and-encode through the ``ServeEngine``,
+fan results back out to the request futures, feed the ``DecorrProbe`` and
+the ``repro.ft`` heartbeat — either on a background thread (``start``/
+``stop``, the production shape) or synchronously (``run_pending``, what
+tests and the closed-loop benchmark drive).
+
+``LMService`` is the continuous-batching LM counterpart over the same
+machinery: the SAME bounded ``MicroBatcher`` admission/backpressure, the
+same heartbeat monitor, the same flat-gauge scrape shape — but its loop
+ticks at decode-step granularity (``step``): admit queued prompts into freed
+slots, run one batched decode over the pool, retire finished requests, and
+feed the probe from the in-flight slots' hidden rows.
+
+``metrics()`` on both is the scrape surface: latency percentiles,
+throughput, queue depth, slot occupancy, time-to-first-token, probe health,
 heartbeat ages — all flat float gauges.
 """
 
@@ -22,10 +31,12 @@ import numpy as np
 from repro.ft.watchdog import HeartbeatMonitor
 from repro.serve.batcher import MicroBatcher, Request, ServeFuture
 from repro.serve.buckets import BucketPolicy
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ContinuousLMEngine, ServeEngine
 from repro.serve.probes import DecorrProbe
+from repro.serve.slots import LMRequest
 
 HEARTBEAT_NAME = "serve.dispatch"
+HEARTBEAT_LM = "serve.lm_decode"
 
 
 class LatencyStats:
@@ -96,8 +107,15 @@ class EmbeddingService:
 
     def submit(self, x, **kw) -> ServeFuture:
         """Queue one request (a single input row or a small row-batch).
-        Raises ``repro.serve.batcher.Backpressure`` when the queue is full."""
-        return self.batcher.submit(np.asarray(x), **kw)
+        Rejects empty/malformed inputs with ``ValueError`` immediately (a
+        zero-row request would otherwise occupy queue+dispatch for nothing);
+        raises ``repro.serve.batcher.Backpressure`` when the queue is full."""
+        x = np.asarray(x)
+        if x.ndim not in (1, 2):
+            raise ValueError(f"expected a (d,) row or (n, d) row-batch, got shape {x.shape}")
+        if x.size == 0:
+            raise ValueError(f"empty request (shape {x.shape}); nothing to embed")
+        return self.batcher.submit(x, **kw)
 
     # -- dispatch loop ------------------------------------------------------
 
@@ -181,6 +199,208 @@ class EmbeddingService:
             "dispatch_errors": float(self._errors),
             "compiled_buckets": float(len(self.engine.compiled_buckets())),
         }
+        out.update(self.stats.metrics())
+        out.update(self.heartbeat.metrics())
+        if self.probe is not None:
+            out.update(self.probe.metrics())
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching LM service
+# ---------------------------------------------------------------------------
+
+
+class LMService:
+    """Continuous-batching LM serving over a ``ContinuousLMEngine``.
+
+    Shares the embedding path's machinery end to end: the bounded
+    ``MicroBatcher`` owns admission and ``Backpressure``, the
+    ``HeartbeatMonitor`` owns liveness (one beat per decode tick, idle
+    included), ``DecorrProbe`` streams representation health from the
+    in-flight slots' hidden rows, and ``metrics()`` exports the same flat
+    float-gauge scrape shape — plus the LM-specific gauges: per-slot
+    occupancy and time-to-first-token percentiles.
+
+    The loop ticks at decode-step granularity (``step``): admit queued
+    prompts into freed slots (prefill-insert), one batched decode over the
+    pool, retire EOS/budget-complete requests.  ``step``/``drain`` are the
+    synchronous entry points (tests, the closed-loop bench);
+    ``start``/``stop`` run the same tick on a background thread.
+    """
+
+    def __init__(
+        self,
+        engine: ContinuousLMEngine,
+        *,
+        max_queue: int = 1024,
+        probe: Optional[DecorrProbe] = None,
+        heartbeat: Optional[HeartbeatMonitor] = None,
+        heartbeat_timeout_s: float = 10.0,
+        record_probe_rows: bool = False,
+    ):
+        self.engine = engine
+        n_slots = engine.pool.n_slots
+        self.batcher = MicroBatcher(
+            BucketPolicy(max_batch=n_slots, max_wait_ms=0.0, max_queue=max_queue)
+        )
+        self.probe = probe
+        if probe is not None and probe.sample_rows is None:
+            # fixed probe window so the probe kernel compiles once: at least
+            # one full pool of slot rows, sublane-aligned
+            from repro.kernels.pallas_utils import SUBLANE, next_multiple
+
+            probe.sample_rows = max(next_multiple(n_slots, SUBLANE), SUBLANE)
+        self.stats = LatencyStats()
+        self._ttft = collections.deque(maxlen=4096)
+        self.tokens_total = 0
+        self._t0 = time.perf_counter()
+        self.heartbeat = heartbeat or HeartbeatMonitor()
+        self.heartbeat.register(HEARTBEAT_LM, heartbeat_timeout_s)
+        self._thread: Optional[threading.Thread] = None
+        self._errors = 0
+        # bench/test hook: keep the exact rows fed to the probe, in order,
+        # so probe readings can be replayed against the offline oracle
+        self.record_probe_rows = record_probe_rows
+        self.probe_rows: List[np.ndarray] = []
+
+    # -- request side -------------------------------------------------------
+
+    def submit(
+        self,
+        tokens,
+        max_new_tokens: int,
+        *,
+        eos_id: Optional[int] = None,
+        block: bool = False,
+        timeout: Optional[float] = None,
+    ) -> ServeFuture:
+        """Queue one generation request.  Raises ``ValueError`` immediately
+        for unservable requests (empty prompt, prompt beyond the largest
+        bucket, cache overflow) — reject, never hang — and ``Backpressure``
+        when the queue is at ``max_queue``."""
+        tokens = np.asarray(tokens, np.int32)
+        if tokens.ndim != 1:
+            raise ValueError(f"prompt must be a 1-D token id array, got shape {tokens.shape}")
+        self.engine.validate_request(int(tokens.shape[0]), int(max_new_tokens))
+        req = LMRequest(tokens=tokens, max_new_tokens=int(max_new_tokens), eos_id=eos_id)
+        return self.batcher.submit(req, block=block, timeout=timeout)
+
+    # -- decode-step tick ---------------------------------------------------
+
+    def _feed_probe(self, rows: np.ndarray):
+        if rows.shape[0] == 0:
+            return
+        if self.record_probe_rows:
+            self.probe_rows.append(rows)
+        if self.probe is not None:
+            self.probe.observe(rows)
+
+    def _finish(self, slot):
+        slot.future.set_result(np.asarray(slot.emitted, np.int32))
+        self.tokens_total += len(slot.emitted)
+        self.stats.observe_batch([slot.future.latency_s])
+        self.engine.release(slot.index)
+
+    def step(self, timeout: float = 0.0) -> Optional[int]:
+        """One scheduler tick: admit into freed slots, decode the pool once,
+        retire finished requests.  Returns in-flight work after the tick
+        (admitted + still-active slots), or None once ``shutdown`` has been
+        signalled and everything drained."""
+        from repro.decorr.probe import slot_probe_rows
+
+        pool = self.engine.pool
+        reqs = self.batcher.next_requests(pool.free_slots(), timeout=timeout)
+        shutting_down = reqs is None
+        for r in reqs or []:
+            slot = pool.admit(r.x, r.future)
+            try:
+                tok, hidden_row = self.engine.insert(slot)
+            except Exception as e:  # pragma: no cover - device failure path
+                self._errors += 1
+                pool.retire(slot.index)
+                r.future.set_exception(e)
+                continue
+            self._ttft.append(time.perf_counter() - r.future.t_submit)
+            self._feed_probe(hidden_row)
+            if slot.emit(tok):
+                self._finish(pool.retire(slot.index))
+        active = pool.active_indices()
+        if active:
+            try:
+                next_tok, hidden = self.engine.decode_step()
+            except Exception as e:  # pragma: no cover - device failure path
+                self._errors += 1
+                for i in active:
+                    pool.retire(i).future.set_exception(e)
+            else:
+                # occupancy counts the lanes that actually decoded this step
+                # (retirement happens after), matching the probe's row feed
+                pool.observe_step()
+                self._feed_probe(slot_probe_rows(hidden, active))
+                for i in active:
+                    if pool[i].emit(int(next_tok[i])):
+                        self._finish(pool.retire(i))
+        self.heartbeat.beat(HEARTBEAT_LM)
+        if shutting_down and not pool.active():
+            return None
+        return len(reqs or []) + len(active)
+
+    def drain(self, max_steps: int = 1_000_000) -> int:
+        """Synchronously tick until the queue and the pool are empty (the
+        deterministic closed-loop entry point).  Returns ticks run."""
+        ran = 0
+        while ran < max_steps and (self.batcher.depth() or self.engine.pool.active()):
+            self.step(timeout=0.0)
+            ran += 1
+        return ran
+
+    def _loop(self):
+        while True:
+            if self.step(timeout=0.05) is None:
+                return
+
+    def warmup(self, prompt_lens=None) -> "LMService":
+        """AOT-compile every prompt bucket, the pool decode step and the
+        probe window, so no admitted request ever traces (``prompt_lens``:
+        exact lengths to warm for recurrent archs; see engine.warmup)."""
+        self.engine.warmup(prompt_lens=prompt_lens)
+        if self.probe is not None:
+            self.probe.warmup(self.engine.cfg.d_model)
+        self.stats.reset_clock()
+        self._t0 = time.perf_counter()
+        return self
+
+    def start(self) -> "LMService":
+        if self._thread is not None:
+            raise RuntimeError("service already started")
+        self._thread = threading.Thread(target=self._loop, name="serve-lm-decode", daemon=True)
+        self.stats.reset_clock()
+        self._t0 = time.perf_counter()
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 30.0):
+        if self._thread is None:
+            return
+        self.batcher.shutdown()
+        self._thread.join(timeout)
+        self._thread = None
+
+    # -- scrape surface -----------------------------------------------------
+
+    def metrics(self) -> Dict[str, float]:
+        dt = max(time.perf_counter() - self._t0, 1e-9)
+        ttft = np.asarray(self._ttft) if self._ttft else np.zeros((1,))
+        out = {
+            "queue_depth": float(self.batcher.depth()),
+            "dispatch_errors": float(self._errors),
+            "tokens_total": float(self.tokens_total),
+            "tok_per_s": self.tokens_total / dt,
+            "ttft_p50_ms": float(np.percentile(ttft, 50) * 1e3),
+            "ttft_p99_ms": float(np.percentile(ttft, 99) * 1e3),
+        }
+        out.update(self.engine.pool.metrics())
         out.update(self.stats.metrics())
         out.update(self.heartbeat.metrics())
         if self.probe is not None:

@@ -13,10 +13,8 @@ What it adds is the operational envelope a 1000-node run needs:
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, Iterator, Optional
+from typing import Any, Callable, Dict, Optional
 
-import jax
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.ft.watchdog import PreemptionSignal, StragglerWatchdog, with_retries

@@ -4,12 +4,18 @@
 dry-run shapes lower: one new token against a KV cache (or SSM state) of
 ``seq_len`` context.  Caches are sequence-sharded over the ``model`` axis
 (attention) per DESIGN.md §4; SSM states are O(1) in context length.
+
+Continuous batching (``repro.serve.engine.ContinuousLMEngine``) drives the
+same decode step with a *vector* ``cache_len`` — one position per batch row,
+so every slot of the pool advances independently — and manages per-slot
+state with ``insert_slot_state`` / ``reset_slot_state`` (tree-wide writes on
+the batch axis of the cache pool) plus ``make_prefill_at_step`` (prefill a
+right-padded prompt, read logits/hidden at the true last token).
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +42,13 @@ def make_prefill_step(cfg: ArchConfig):
     return prefill
 
 
-def make_decode_step(cfg: ArchConfig):
+def make_decode_step(cfg: ArchConfig, return_hidden: bool = False):
+    """One-token decode step.  ``cache_len`` may be a scalar (whole-batch
+    position, the ``greedy_generate`` regime) or a (B,) vector of per-slot
+    positions (continuous batching).  With ``return_hidden`` the step also
+    yields the final hidden state of the new token — the decorrelation
+    probes' sampling target for in-flight slots."""
+
     def decode(params, caches, cache_len, tokens=None, embeds=None, positions=None):
         out = forward(
             params,
@@ -47,9 +59,67 @@ def make_decode_step(cfg: ArchConfig):
             caches=caches,
             cache_len=cache_len,
         )
+        if return_hidden:
+            return out.logits[:, 0], out.hidden[:, 0], out.caches
         return out.logits[:, 0], out.caches
 
     return decode
+
+
+def make_prefill_at_step(cfg: ArchConfig):
+    """Prefill a right-padded prompt and read the step outputs at the TRUE
+    last prompt token (``true_len - 1``), not the padded end.
+
+    Causal attention never lets position ``true_len - 1`` see the padding
+    rows, so the returned logits/hidden are exactly the unpadded prefill's;
+    the cache rows the padding wrote beyond ``true_len`` are masked out by
+    the per-slot ``cache_len`` during decode and overwritten as the slot
+    advances.  (Recurrent mixers — SSM/RWKV — integrate padding into their
+    state, so ``ContinuousLMEngine`` only uses padded prompt buckets for
+    attention-only patterns and exact-length prefill otherwise.)
+    """
+
+    def prefill_at(params, caches, tokens, true_len):
+        out = forward(
+            params,
+            cfg,
+            tokens=tokens,
+            caches=caches,
+            cache_len=jnp.asarray(0, jnp.int32),
+        )
+        last = jnp.maximum(true_len - 1, 0)
+        logits = jax.lax.dynamic_index_in_dim(out.logits, last, axis=1, keepdims=False)
+        hidden = jax.lax.dynamic_index_in_dim(out.hidden, last, axis=1, keepdims=False)
+        return logits, hidden, out.caches
+
+    return prefill_at
+
+
+# ---------------------------------------------------------------------------
+# Per-slot cache pool surgery (continuous batching)
+# ---------------------------------------------------------------------------
+#
+# Every cache leaf is laid out (repeats, batch, ...) — axis 1 is the slot
+# axis — so inserting a prefilled single-request cache (batch=1 leaves) or
+# resetting a retired slot is one tree-wide write.  Both take a *traced* slot
+# index: jit them once and reuse for every slot.
+
+
+def insert_slot_state(pool, one, slot):
+    """Write a batch-1 cache/state tree ``one`` into slot ``slot`` of the
+    batched ``pool`` (leaf shapes (repeats, 1, ...) -> (repeats, B, ...))."""
+    return jax.tree.map(
+        lambda p, o: jax.lax.dynamic_update_slice_in_dim(p, o.astype(p.dtype), slot, axis=1),
+        pool,
+        one,
+    )
+
+
+def reset_slot_state(pool, slot):
+    """Zero slot ``slot`` across every cache/state leaf.  Decode masks freed
+    slots out by ``cache_len`` anyway; resetting keeps retired KV/SSM state
+    from lingering in memory dumps and makes slot reuse order-independent."""
+    return jax.tree.map(lambda p: p.at[:, slot].set(jnp.zeros((), p.dtype)), pool)
 
 
 def greedy_generate(

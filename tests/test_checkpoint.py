@@ -1,12 +1,10 @@
 """Checkpointing: roundtrip (incl. bf16), atomicity, retention, resume."""
 
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import (
     CheckpointManager,

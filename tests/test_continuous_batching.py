@@ -1,0 +1,294 @@
+"""Continuous-batching LM serving: slot pool bookkeeping, the oracle that
+matters (interleaved continuous decoding emits EXACTLY whole-request
+``greedy_generate``'s tokens, per request), EOS/budget retirement, admission
+rejection (never hang), backpressure sharing, and probe-under-interleaving
+agreement with the offline training-path oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.decorr.config import DecorrConfig
+from repro.models import init_params
+from repro.serve import (
+    Backpressure,
+    ContinuousLMEngine,
+    DecorrProbe,
+    LMRequest,
+    LMService,
+    MicroBatcher,
+    BucketPolicy,
+    SlotPool,
+)
+from repro.serve.loadgen import lm_probe_oracle_err
+from repro.train.serve import greedy_generate
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = get_config("gemma2-2b").reduced()
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def rwkv():
+    cfg = get_config("rwkv6-3b").reduced()
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _prompts(cfg, spec, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        (rng.integers(0, cfg.vocab_size, s).astype(np.int32), m) for s, m in spec
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Slot pool (pure bookkeeping)
+# ---------------------------------------------------------------------------
+
+
+class TestSlotPool:
+    def _req(self, n=4, m=3, eos=None):
+        return LMRequest(np.zeros(n, np.int32), m, eos_id=eos)
+
+    def test_admit_retire_freelist(self):
+        pool = SlotPool(2, max_len=32)
+        a = pool.admit(self._req(), None)
+        b = pool.admit(self._req(), None)
+        assert pool.free_slots() == 0 and {a.index, b.index} == {0, 1}
+        with pytest.raises(RuntimeError):
+            pool.admit(self._req(), None)
+        pool.retire(a.index)
+        c = pool.admit(self._req(), None)
+        assert c.index == a.index  # freed slot reused
+        assert pool.admitted_total == 3 and pool.retired_total == 1
+
+    def test_admit_rejects_cache_overflow(self):
+        pool = SlotPool(2, max_len=8)
+        with pytest.raises(ValueError):
+            pool.admit(self._req(n=6, m=4), None)
+
+    def test_positions_and_tokens_vectors(self):
+        pool = SlotPool(3, max_len=32)
+        s = pool.admit(self._req(n=5), None)
+        # prefill emits the first token without writing it: pos == prompt_len
+        assert s.pos == 4
+        done = s.emit(7)
+        assert not done and s.pos == 5 and s.last_token == 7
+        np.testing.assert_array_equal(pool.cache_lens(), [5, 0, 0])
+        np.testing.assert_array_equal(pool.last_tokens(), [7, 0, 0])
+
+    def test_eos_and_budget_retirement(self):
+        s = SlotPool(1, 32).admit(self._req(m=3, eos=9), None)
+        assert not s.emit(1)
+        assert s.emit(9)  # EOS retires early
+        s2 = SlotPool(1, 32).admit(self._req(m=2), None)
+        assert not s2.emit(1)
+        assert s2.emit(2)  # token budget exhausted
+
+    def test_occupancy_accounting(self):
+        pool = SlotPool(4, max_len=32)
+        pool.admit(self._req(), None)
+        pool.admit(self._req(), None)
+        pool.observe_step()
+        assert pool.occupancy() == 0.5
+        m = pool.metrics()
+        assert m["slots_active"] == 2.0 and m["slots_total"] == 4.0
+
+
+# ---------------------------------------------------------------------------
+# Engine + service: interleaved decoding == whole-request greedy oracle
+# ---------------------------------------------------------------------------
+
+
+SPEC = [(4, 5), (9, 3), (13, 8), (24, 2), (1, 4), (7, 7)]
+
+
+class TestContinuousMatchesGreedy:
+    def _run(self, cfg, params, spec, n_slots=4, max_len=48):
+        eng = ContinuousLMEngine(cfg, params, n_slots=n_slots, max_len=max_len,
+                                 max_prompt_len=24)
+        svc = LMService(eng)
+        svc.warmup(prompt_lens=[len(t) for t, _ in spec])
+        futs = [svc.submit(t, m) for t, m in spec]
+        svc.drain()
+        for (t, m), f in zip(spec, futs):
+            want = np.asarray(
+                greedy_generate(params, cfg, jnp.asarray(t[None]), m, max_len=max_len)
+            )[0]
+            np.testing.assert_array_equal(f.result(timeout=5), want)
+        return svc
+
+    def test_attention_arch_padded_prompt_buckets(self, gemma):
+        cfg, params = gemma
+        svc = self._run(cfg, params, _prompts(cfg, SPEC))
+        assert svc.engine.pad_prompts
+        m = svc.metrics()
+        assert m["slots_retired_total"] == len(SPEC)
+        assert 0.0 < m["slots_occupancy"] <= 1.0
+        assert m["ttft_p99_ms"] >= m["ttft_p50_ms"] > 0.0
+
+    def test_recurrent_arch_exact_length_prefill(self, rwkv):
+        cfg, params = rwkv
+        svc = self._run(cfg, params, _prompts(cfg, SPEC[:4]))
+        assert not svc.engine.pad_prompts
+
+    def test_eos_retires_early_with_matching_prefix(self, gemma):
+        cfg, params = gemma
+        (tokens, _), = _prompts(cfg, [(6, 1)])
+        max_len = 48
+        want = np.asarray(
+            greedy_generate(params, cfg, jnp.asarray(tokens[None]), 8, max_len=max_len)
+        )[0]
+        eos = int(want[4])  # force retirement mid-request
+        k = int(np.argmax(want == eos))  # first occurrence is the stop point
+        eng = ContinuousLMEngine(cfg, params, n_slots=2, max_len=max_len, max_prompt_len=24)
+        svc = LMService(eng)
+        svc.warmup()
+        fut = svc.submit(tokens, 8, eos_id=eos)
+        svc.drain()
+        np.testing.assert_array_equal(fut.result(timeout=5), want[: k + 1])
+
+    def test_single_token_budget_retires_at_prefill(self, gemma):
+        cfg, params = gemma
+        (tokens, _), = _prompts(cfg, [(5, 1)])
+        eng = ContinuousLMEngine(cfg, params, n_slots=2, max_len=32, max_prompt_len=16)
+        svc = LMService(eng)
+        svc.warmup()
+        fut = svc.submit(tokens, 1)
+        svc.step(timeout=0.0)  # admitted + retired in one tick, no decode needed
+        want = np.asarray(
+            greedy_generate(params, cfg, jnp.asarray(tokens[None]), 1, max_len=32)
+        )[0]
+        np.testing.assert_array_equal(fut.result(timeout=5), want)
+        assert eng.pool.free_slots() == 2
+
+
+# ---------------------------------------------------------------------------
+# Admission edge cases: reject (never hang) + backpressure
+# ---------------------------------------------------------------------------
+
+
+class TestAdmissionEdgeCases:
+    def _service(self, gemma, **kw):
+        cfg, params = gemma
+        eng = ContinuousLMEngine(cfg, params, n_slots=2, max_len=32, max_prompt_len=16)
+        return LMService(eng, **kw)
+
+    def test_empty_prompt_rejected(self, gemma):
+        svc = self._service(gemma)
+        with pytest.raises(ValueError, match="empty prompt"):
+            svc.submit(np.zeros(0, np.int32), 4)
+        assert svc.batcher.depth() == 0  # rejected at submit, never queued
+
+    def test_prompt_longer_than_largest_bucket_rejected(self, gemma):
+        svc = self._service(gemma)
+        assert svc.engine.max_prompt_len == 16
+        with pytest.raises(ValueError, match="largest prompt bucket"):
+            svc.submit(np.zeros(17, np.int32), 4)
+        assert svc.batcher.depth() == 0
+
+    def test_cache_overflow_rejected(self, gemma):
+        svc = self._service(gemma)
+        with pytest.raises(ValueError, match="slot cache"):
+            svc.submit(np.zeros(16, np.int32), 20)  # 16 + 20 > 32
+
+    def test_padded_bucket_ladder_must_fit_cache(self, gemma):
+        """Regression: max_prompt_len=19 rounds UP to a 24-row prompt bucket
+        that cannot prefill into a 20-row cache — must fail at construction,
+        not crash a request mid-insert."""
+        cfg, params = gemma
+        with pytest.raises(ValueError, match="padded prompt bucket"):
+            ContinuousLMEngine(cfg, params, n_slots=2, max_len=20, max_prompt_len=19)
+
+    def test_backpressure_when_queue_full(self, gemma):
+        svc = self._service(gemma, max_queue=2)
+        svc.submit(np.zeros(4, np.int32), 2)
+        svc.submit(np.zeros(4, np.int32), 2)
+        with pytest.raises(Backpressure):
+            svc.submit(np.zeros(4, np.int32), 2)
+
+    def test_embedding_service_rejects_empty(self):
+        from repro.serve import EmbeddingService, ServeEngine
+        from repro.train.ssl import SSLModelConfig, init_ssl_params
+
+        model = SSLModelConfig(input_dim=8, backbone_widths=(16,), projector_widths=(16, 16))
+        svc = EmbeddingService(
+            ServeEngine(model, init_ssl_params(jax.random.PRNGKey(0), model))
+        )
+        with pytest.raises(ValueError, match="empty request"):
+            svc.submit(np.zeros((0, 8), np.float32))
+        with pytest.raises(ValueError, match="row-batch"):
+            svc.submit(np.zeros((2, 2, 2), np.float32))
+
+    def test_audio_codes_arch_rejected(self):
+        cfg = get_config("musicgen-large").reduced()
+        with pytest.raises(NotImplementedError):
+            ContinuousLMEngine(cfg, params=None, n_slots=2, max_len=32)
+
+
+class TestBatcherNextRequests:
+    def test_pops_up_to_k_whole_requests(self):
+        mb = MicroBatcher(BucketPolicy(max_batch=8, max_wait_ms=0.0))
+        for i in range(5):
+            mb.submit(LMRequest(np.zeros(3, np.int32), 2))
+        got = mb.next_requests(3, timeout=0.0)
+        assert len(got) == 3
+        assert len(mb.next_requests(8, timeout=0.0)) == 2
+        assert mb.next_requests(8, timeout=0.0) == []
+        assert mb.next_requests(0, timeout=0.0) == []
+
+    def test_shutdown_drains_then_signals_none(self):
+        mb = MicroBatcher(BucketPolicy(max_batch=8, max_wait_ms=0.0))
+        mb.submit(LMRequest(np.zeros(3, np.int32), 2))
+        mb.shutdown()
+        assert len(mb.next_requests(4, timeout=0.0)) == 1
+        assert mb.next_requests(4, timeout=0.0) is None
+        assert mb.next_requests(0, timeout=0.0) is None
+
+
+# ---------------------------------------------------------------------------
+# Probes under interleaving + the threaded loop
+# ---------------------------------------------------------------------------
+
+
+class TestContinuousService:
+    def test_probe_matches_oracle_under_interleaving(self, gemma):
+        cfg, params = gemma
+        eng = ContinuousLMEngine(cfg, params, n_slots=4, max_len=48, max_prompt_len=24)
+        probe = DecorrProbe(DecorrConfig(style="vic", reg="sum", q=2))
+        svc = LMService(eng, probe=probe, record_probe_rows=True)
+        svc.warmup()
+        for t, m in _prompts(cfg, SPEC):
+            svc.submit(t, m)
+        svc.drain()
+        assert probe.steps >= 1
+        err = lm_probe_oracle_err(svc)
+        assert err is not None and err < 1e-3
+        m = svc.metrics()
+        assert m["decorr_probe_steps"] == float(probe.steps)
+        # probe rows all came from in-flight slots: total rows fed ==
+        # prefills + sum of active-slot decode lanes
+        fed = sum(r.shape[0] for r in svc.probe_rows)
+        assert fed == eng.pool.admitted_total + eng.pool.active_slot_steps
+
+    def test_threaded_service_with_heartbeat(self, gemma):
+        cfg, params = gemma
+        eng = ContinuousLMEngine(cfg, params, n_slots=2, max_len=32, max_prompt_len=16)
+        svc = LMService(eng)
+        svc.warmup()
+        svc.start()
+        try:
+            futs = [svc.submit(t, m, block=True, timeout=30.0)
+                    for t, m in _prompts(cfg, [(4, 3), (7, 2), (9, 4)])]
+            outs = [f.result(timeout=60.0) for f in futs]
+        finally:
+            svc.stop()
+        assert [len(o) for o in outs] == [3, 2, 4]
+        m = svc.metrics()
+        assert m["served_total"] == 3.0
+        assert m["heartbeat_stale"] == 0.0
+        assert m["tokens_total"] == 9.0

@@ -14,7 +14,6 @@ import sys
 import textwrap
 
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.core.losses import DecorrConfig, ssl_loss

@@ -1,7 +1,5 @@
 """Train-loop fault tolerance: retry, preemption, deterministic resume."""
 
-import dataclasses
-import os
 
 import jax
 import jax.numpy as jnp

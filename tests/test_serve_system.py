@@ -6,7 +6,6 @@ Multi-device cases run in a subprocess with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (same pattern as
 test_decorr_engine) so the main pytest process keeps one CPU device."""
 
-import dataclasses
 import json
 import os
 import subprocess

@@ -69,7 +69,6 @@ class TestParamShardingSpecs:
                 ), f"{arch}: large leaf {jax.tree_util.keystr(path)} {leaf.shape} replicated"
 
     def test_batch_spec_falls_back_when_indivisible(self):
-        import os
         from repro.launch import specs as S
 
         # batch=1 (long_500k) cannot shard over 32 ways -> replicated

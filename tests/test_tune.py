@@ -17,7 +17,6 @@ from repro.kernels.sumvec_fft import ref as fref
 from repro.kernels.xcorr_offdiag import kernel as xkernel
 from repro.kernels.xcorr_offdiag import ref as xref
 from repro.tune import cache as tcache
-from repro.tune import cost as tcost
 from repro.tune import dispatch as tdispatch
 from repro.tune import space as tspace
 
