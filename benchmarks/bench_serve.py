@@ -1,11 +1,15 @@
 """Serving policies: (embedding path) naive per-request vs dynamic
-micro-batching on the ssl-paper reduced config, and (LM path) whole-request
-``greedy_generate`` vs continuous batching on a mixed-length workload.
-Emits ``BENCH_serve.json`` (p50/p99 latency + throughput per policy, probe
-health, probe-vs-oracle agreement); CI gates (``benchmarks/compare.py``)
-that micro-batched >= naive, continuous >= whole-request (identical tokens),
-probes match the training-path oracle, and neither speedup ratio regresses
->20% against the committed baseline.
+micro-batching on the ssl-paper reduced config, (LM path) whole-request
+``greedy_generate`` vs continuous batching on a mixed-length workload, and
+(paged path) dense vs paged KV cache on a length-SKEWED workload — many
+short requests sharing a pool sized for the rare long one, the fragmentation
+case block tables exist for.  Emits ``BENCH_serve.json`` (p50/p99 latency +
+throughput per policy, probe health, probe-vs-oracle agreement, paged peak
+cache bytes vs the dense pool); CI gates (``benchmarks/compare.py``) that
+micro-batched >= naive, continuous >= whole-request (identical tokens),
+paged == dense tokens with strictly smaller peak cache bytes, probes match
+the training-path oracle, and no gated ratio regresses >20% against the
+committed baseline.
 """
 
 from __future__ import annotations
@@ -25,6 +29,16 @@ POLICY = dict(max_batch=64, max_wait_ms=2.0)
 N_REQUESTS = 512
 # LM continuous batching: small attention arch, mixed-length closed loop
 LM = dict(arch="gemma2-2b", n_requests=32, slots=8)
+# paged KV: skewed length mix (mostly short prompts, a rare long one dictates
+# the dense pool's max_len), page size pinned for a reproducible layout
+PAGED = dict(
+    n_requests=24,
+    prompt_lens=(4, 6, 8, 40),
+    new_tokens=(4, 12, 20),
+    slots=8,
+    page_size=16,
+    prefill_chunk=16,
+)
 
 
 def run():
@@ -67,6 +81,7 @@ def run():
     )
 
     lm_report = _run_lm_continuous()
+    paged_report = _run_paged()
 
     out = {
         "config": {
@@ -75,6 +90,7 @@ def run():
             "n_requests": N_REQUESTS,
             "buckets": list(bucket_sizes(policy)),
             "lm": LM,
+            "paged": PAGED,
         },
         "naive": report["naive"],
         "microbatch": report["microbatch"],
@@ -84,6 +100,7 @@ def run():
         },
         "gate": report["gate"],
         "lm": lm_report,
+        "paged": paged_report,
     }
     with open(os.path.join(os.getcwd(), "BENCH_serve.json"), "w") as f:
         json.dump(out, f, indent=2, sort_keys=True, default=float)
@@ -114,6 +131,20 @@ def run():
         f"token_mismatches={g['token_mismatches']:.0f};"
         f"probe_oracle_rel_err={g.get('probe_oracle_rel_err', float('nan')):.2e};"
         f"occupancy={lm_report['service_metrics']['slots_occupancy']:.2f}",
+    ))
+    for name in ("dense", "paged"):
+        r = paged_report[name]
+        cache = r.get("cache_bytes", r.get("paged_peak_cache_bytes", 0.0))
+        rows.append(fmt_row(
+            f"serve/paged_{name}", r["p50_ms"] * 1e3,
+            f"tok_per_s={r['tok_per_s']:.0f};cache_bytes={cache:.0f}",
+        ))
+    pg = paged_report["gate"]
+    rows.append(fmt_row(
+        "serve/gate_paged_peak_lt_dense", 0.0,
+        f"ok={pg['paged_peak_lt_dense']};bytes_ratio={pg['peak_cache_bytes_ratio']:.3f};"
+        f"token_mismatches={pg['token_mismatches']:.0f};"
+        f"tok_per_s_ratio={pg['tok_per_s_ratio']:.2f}",
     ))
     return rows
 
@@ -148,6 +179,32 @@ def _run_lm_continuous():
         if k.startswith(("slots_", "ttft_", "decorr_")) or k in ("tok_per_s", "tokens_total")
     }
     return out
+
+
+def _run_paged():
+    """Dense vs paged continuous batching at a skewed length mix (the
+    acceptance gate: identical greedy tokens, strictly lower peak cache
+    bytes than the dense pool's permanent reservation; a chunked-prefill
+    paged run reports its tokens + TTFT alongside)."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve.loadgen import LMLoadConfig, compare_paged_dense
+
+    cfg = get_config(LM["arch"]).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    load = LMLoadConfig(
+        n_requests=PAGED["n_requests"],
+        prompt_lens=PAGED["prompt_lens"],
+        new_tokens=PAGED["new_tokens"],
+    )
+    return compare_paged_dense(
+        cfg,
+        params,
+        load,
+        n_slots=PAGED["slots"],
+        page_size=PAGED["page_size"],
+        prefill_chunk=PAGED["prefill_chunk"],
+    )
 
 
 if __name__ == "__main__":

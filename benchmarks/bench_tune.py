@@ -30,6 +30,11 @@ def _shapes() -> list[tuple[int, int]]:
     return arch_shapes("ssl-paper")
 
 
+# the LM-serving kernel family: the continuous-batching pool shape of the
+# serve bench ((slots, max_len, kv_heads, head_dim) on gemma2-2b reduced)
+SERVE_JOBS = [("paged_attention", (8, 80, 2, 16))]
+
+
 def run():
     from repro import tune
     from repro.tune.cli import jobs_for
@@ -39,8 +44,11 @@ def run():
     # persist=False: a reporting run must not mutate the machine's dispatch
     # cache — pre-warming is the CLI pre-tuner's job, not the benchmark's.
     kw = dict(mode="dry", max_candidates=6, persist=False)
-    for n, d in _shapes():
+    shapes = _shapes()
+    for i, (n, d) in enumerate(shapes):
         plan_result, jobs = jobs_for(n, d, **kw)
+        if i == len(shapes) - 1:
+            jobs = jobs + SERVE_JOBS  # once, not per ssl width
         results = [plan_result]
         for kernel, shape in jobs:
             results.append(tune.tune(kernel, shape, **kw))

@@ -60,6 +60,10 @@ HARD_GATES = {
          "slot interleaving changes no request's tokens"),
         ("lm.gate.probe_oracle_rel_err", lambda v: v < 1e-3,
          "in-flight probe matches training oracle under interleaving"),
+        ("paged.gate.token_mismatches", lambda v: v == 0,
+         "paged KV cache changes no request's greedy tokens"),
+        ("paged.gate.paged_peak_lt_dense", lambda v: bool(v),
+         "paged peak cache bytes < dense pool at the skewed length mix"),
     ],
     "tune": [],  # per-kernel gates generated below
 }
@@ -71,6 +75,10 @@ RATIO_METRICS = {
         "microbatch_speedup": (+1, "gate.speedup"),
         "continuous_speedup": (+1, "lm.gate.speedup"),
         "slot_occupancy": (+1, "lm.service_metrics.slots_occupancy"),
+        # peak_cache_bytes_ratio is deterministic (same workload, same
+        # allocator) — gate it; tok_per_s_ratio is reported in the JSON but
+        # too load-sensitive on CPU CI to gate against a snapshot baseline
+        "paged_peak_bytes_ratio": (-1, "paged.gate.peak_cache_bytes_ratio"),
     },
     "tune": {},  # per-kernel ratios generated from the report
 }

@@ -1,0 +1,27 @@
+"""Paged decode attention: block-table KV reads for the serving slot pool.
+
+Kernel family layout mirrors the other three (``sumvec_fft``,
+``grouped_sumvec``, ``xcorr_offdiag``):
+
+  * ``kernel.py`` — the Pallas TPU kernel (block-table page gather via
+    scalar-prefetched index maps, online-softmax accumulation per slot);
+  * ``ops.py``    — jit'd wrappers + padding, page-size selection through
+    ``repro.tune`` (``auto_page_size`` / ``best_config("paged_attention")``);
+  * ``ref.py``    — pure-jnp oracle (dense gather + masked softmax), used to
+    validate the kernel and as the CPU/interpret numerics reference.
+"""
+
+from repro.kernels.paged_attention.ops import (
+    auto_page_size,
+    paged_decode_attention,
+    paged_decode_attention_raw,
+)
+from repro.kernels.paged_attention.ref import gather_pages, paged_decode_ref
+
+__all__ = [
+    "auto_page_size",
+    "gather_pages",
+    "paged_decode_attention",
+    "paged_decode_attention_raw",
+    "paged_decode_ref",
+]

@@ -1,0 +1,129 @@
+"""jit'd wrappers + page-size dispatch for the paged-attention kernel family.
+
+Unlike the matmul families, the tunable config here — the KV page size — is
+baked into the PHYSICAL layout of the page pool, so it is consumed where the
+pool is built (``repro.serve.paging``), not at call time: the serving engine
+asks ``repro.tune`` for the page size once at construction
+(``auto_page_size`` / ``best_config("paged_attention", (slots, max_len, kv,
+hd))``), and every subsequent decode step just runs at that layout.  The
+candidate space, analytic cost model, and dry/measure tuner builders live in
+``repro.tune.{space,cost,tuner}`` like the other three kernel families.
+
+Implementation routing follows ``r_sum``: ``repro.tune.best_impl
+("paged_attention")`` picks the Pallas kernel on TPU and the jnp
+gather-reference elsewhere (both overridable via ``tune.override``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention import ref as R
+from repro.kernels.paged_attention.kernel import paged_decode_kernel_call
+from repro.tune import space as tune_space
+from repro.tune.dispatch import best_config
+
+Array = jax.Array
+
+# Kernel time alone always prefers the largest page (fewest grid steps), but
+# every admitted request strands on average half a page of dead rows — the
+# fragmentation paging exists to remove.  ``auto_page_size`` therefore caps
+# the tuned pick; callers with measured workloads pass their own page size.
+PAGE_PREFER = 32
+
+
+def auto_page_size(
+    n_slots: int, max_len: int, n_kv_heads: int, head_dim: int, prefer: int = PAGE_PREFER
+) -> int:
+    """Tuned default page size for a (slots, max_len, kv, hd) pool: the
+    ``repro.tune`` winner (override > memo > disk cache > analytic), clamped
+    to the largest legal candidate <= ``prefer``."""
+    shape = (n_slots, max_len, n_kv_heads, head_dim)
+    page = int(best_config("paged_attention", shape)["page"])
+    if page <= prefer:
+        return page
+    legal = [c["page"] for c in tune_space.candidates("paged_attention", shape)]
+    capped = [p for p in legal if p <= prefer]
+    return max(capped) if capped else min(legal)
+
+
+def _expand_heads(pages: Array, n_rep: int) -> Array:
+    if n_rep == 1:
+        return pages
+    return jnp.repeat(pages, n_rep, axis=2)
+
+
+def paged_decode_attention_raw(
+    q: Array,
+    k_pages: Array,
+    v_pages: Array,
+    block_tables: Array,
+    lens: Array,
+    *,
+    scale: float,
+    softcap: float = 0.0,
+    window: int = 0,
+) -> Array:
+    """One decode step of attention over block-table pages (Pallas route).
+
+    q: (B, H, hd) query rows; k/v_pages: (P, page, KV, hd) physical pools
+    (GQA is batched over kv heads inside the kernel — the pools are never
+    head-expanded); block_tables: (B, NB) int32; lens: (B,) valid context
+    tokens per slot.  Returns (B, H, hd) f32.
+    """
+    return paged_decode_kernel_call(
+        q,
+        k_pages,
+        v_pages,
+        block_tables,
+        lens,
+        scale=scale,
+        softcap=softcap,
+        window=window,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "window"))
+def paged_decode_attention(
+    q: Array,
+    k_pages: Array,
+    v_pages: Array,
+    block_tables: Array,
+    lens: Array,
+    *,
+    scale: float,
+    softcap: float = 0.0,
+    window: int = 0,
+) -> Array:
+    return paged_decode_attention_raw(
+        q, k_pages, v_pages, block_tables, lens, scale=scale, softcap=softcap, window=window
+    )
+
+
+def paged_decode_jnp(
+    q: Array,
+    k_pages: Array,
+    v_pages: Array,
+    block_tables: Array,
+    lens: Array,
+    *,
+    scale: float,
+    softcap: float = 0.0,
+    window: int = 0,
+) -> Array:
+    """The gather-reference route (CPU/interpret backends), GQA-expanding
+    like the raw kernel wrapper so both impls take identical inputs."""
+    n_rep = q.shape[1] // k_pages.shape[2]
+    return R.paged_decode_ref(
+        q,
+        _expand_heads(k_pages, n_rep),
+        _expand_heads(v_pages, n_rep),
+        block_tables,
+        lens,
+        scale=scale,
+        softcap=softcap,
+        window=window,
+    )

@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for paged decode attention.
+
+Deliberately independent of ``repro.models``: materializes the dense
+(B, NB * page, H, hd) context view with one gather over the block table and
+evaluates masked softmax attention term-by-term.  O(B * S * H * hd) with the
+full gather materialized — used to validate the Pallas kernel, and as the
+numerics reference the serving engine's jnp route must match bit-for-bit
+against the dense cache path.
+
+Layout conventions (all f32, heads already GQA-expanded):
+
+  q             (B, H, hd)       one query token per pool slot
+  k/v_pages     (P, page, H, hd) physical page pool (P pages of ``page`` tokens)
+  block_tables  (B, NB) int32    logical block j of slot b -> physical page id
+  lens          (B,) int32       valid context tokens per slot (masks the rest)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gather_pages(pages, block_tables):
+    """(P, page, H, hd) pages + (B, NB) table -> (B, NB * page, H, hd) dense
+    context view (rows beyond a slot's valid length hold arbitrary page
+    content — callers must mask by ``lens``)."""
+    b, nb = block_tables.shape
+    _, page, h, hd = pages.shape
+    return pages[block_tables].reshape(b, nb * page, h, hd)
+
+
+def paged_decode_ref(
+    q,
+    k_pages,
+    v_pages,
+    block_tables,
+    lens,
+    *,
+    scale: float,
+    softcap: float = 0.0,
+    window: int = 0,
+):
+    """Masked softmax attention over the gathered page view.
+
+    ``window > 0`` restricts to the sliding-window rows [len - window, len)
+    (local attention); ``softcap > 0`` applies the tanh logit cap.  Returns
+    (B, H, hd) f32.
+    """
+    k = gather_pages(k_pages, block_tables)
+    v = gather_pages(v_pages, block_tables)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    ki = jnp.arange(k.shape[1])[None, None, :]
+    cl = lens.reshape(-1, 1, 1)
+    mask = ki < cl
+    if window:
+        mask &= ki >= cl - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32))

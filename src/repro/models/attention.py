@@ -1,5 +1,6 @@
 """GQA attention: RoPE / M-RoPE, local+global, softcap, chunked-causal
-(flash-style) prefill, seq-sharded KV-cache decode.
+(flash-style) prefill, seq-sharded KV-cache decode, paged (block-table)
+decode and incremental (chunked) prefill for the serving slot pool.
 
 Implementation notes
   * Chunked prefill uses a *flattened (i, j <= i) pair scan*: the static list
@@ -241,6 +242,18 @@ def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Array]
     }
 
 
+def init_paged_kv_cache(cfg: ArchConfig, num_pages: int, page: int) -> Dict[str, Array]:
+    """Block-table layout: one physical pool of ``num_pages`` pages of
+    ``page`` tokens each, shared by all slots through their block tables
+    (page 0 is the allocator's sentinel — written by masked lanes, never
+    read unmasked)."""
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k_pages": jnp.zeros((num_pages, page, kv, hd), cfg.compute_dtype),
+        "v_pages": jnp.zeros((num_pages, page, kv, hd), cfg.compute_dtype),
+    }
+
+
 def _decode_attention(q, cache_k, cache_v, cache_len, cfg: ArchConfig, spec: BlockSpec):
     """q: (B, 1, H, hd); cache_(k|v): (B, L, KV, hd); cache_len: scalar or (B,)
     per-row lengths (continuous batching: each slot decodes at its own
@@ -261,6 +274,69 @@ def _decode_attention(q, cache_k, cache_v, cache_len, cfg: ArchConfig, spec: Blo
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
 
 
+def _paged_decode(q, k, v, cache, cache_len, block_tables, cfg: ArchConfig, spec: BlockSpec):
+    """Single-token decode through block-table pages: scatter the new token's
+    k/v into its slot's current page, then attend over the table.
+
+    The jnp route gathers the pages back into a (B, NB * page, KV, hd) dense
+    view and reuses ``_decode_attention`` VERBATIM — when NB * page equals the
+    dense pool's max_len (the engine guarantees it), paged decode is
+    bit-identical to the dense path: rows past ``cache_len`` differ only in
+    masked positions whose probability mass underflows to exactly 0.  On TPU
+    ``repro.tune.best_impl`` routes to the Pallas block-table kernel instead
+    (``kernels/paged_attention``), which never materializes the gather.
+    """
+    from repro.kernels.paged_attention import ops as paged_ops
+    from repro.tune.dispatch import best_impl
+
+    b = q.shape[0]
+    hd = q.shape[-1]
+    page = cache["k_pages"].shape[1]
+    cl = cache_len if jnp.ndim(cache_len) == 1 else jnp.full((b,), cache_len, jnp.int32)
+    rows = jnp.arange(b)
+    phys = block_tables[rows, cl // page]
+    kp = cache["k_pages"].at[phys, cl % page].set(k[:, 0])
+    vp = cache["v_pages"].at[phys, cl % page].set(v[:, 0])
+    new_cache = {"k_pages": kp, "v_pages": vp}
+    if best_impl("paged_attention") == "pallas":
+        out = paged_ops.paged_decode_attention(
+            q[:, 0],
+            kp,
+            vp,
+            block_tables,
+            cl + 1,
+            scale=cfg.attn_scale or (1.0 / math.sqrt(hd)),
+            softcap=cfg.attn_softcap or 0.0,
+            window=cfg.window_size if spec.attn_type == "local" else 0,
+        )
+        return out[:, None].astype(q.dtype), new_cache
+    kv = kp.shape[2]
+    kd = kp[block_tables].reshape(b, -1, kv, hd)
+    vd = vp[block_tables].reshape(b, -1, kv, hd)
+    return _decode_attention(q, kd, vd, cl + 1, cfg, spec), new_cache
+
+
+def _offset_prefill_attention(q, cache_k, cache_v, offset, cfg: ArchConfig, spec: BlockSpec):
+    """Chunked prefill: queries at absolute positions [offset, offset + S)
+    attend to cache rows [0, offset + S) — causal across the already-written
+    prefix AND within the chunk.  cache_(k|v) already contain the chunk's
+    k/v at [offset, offset + S)."""
+    b, s, h, hd = q.shape
+    scale = cfg.attn_scale or (1.0 / math.sqrt(hd))
+    k = _repeat_kv(cache_k, h // cache_k.shape[2])
+    v = _repeat_kv(cache_v, h // cache_v.shape[2])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    qi = offset + jnp.arange(s)[:, None]
+    ki = jnp.arange(k.shape[1])[None, :]
+    mask = ki <= qi
+    if spec.attn_type == "local":
+        mask &= ki > qi - cfg.window_size
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
 # ---------------------------------------------------------------------------
 # Public entry
 # ---------------------------------------------------------------------------
@@ -274,12 +350,18 @@ def attn_apply(
     positions: Array,
     cache: Optional[Dict[str, Array]] = None,
     cache_len: Optional[Array] = None,
+    block_tables: Optional[Array] = None,
+    chunked: bool = False,
 ) -> Tuple[Array, Optional[Dict[str, Array]]]:
     """Returns (output (B, S, d), updated cache or None).
 
     * cache is None: training/scoring forward over the full sequence.
     * cache given, S == 1: single-token decode (writes position cache_len).
-    * cache given, S > 1: prefill — fills cache[0:S] and returns it.
+      A cache with ``k_pages`` routes through the paged (block-table) path;
+      the dense scalar- and vector-``cache_len`` paths are untouched.
+    * cache given, S > 1: prefill — fills cache[0:S] and returns it; with
+      ``chunked=True`` the chunk is written at ``cache_len`` instead and
+      attends across the already-prefilled prefix (incremental prefill).
     """
     b, s, _ = x.shape
     h, hd = cfg.n_heads, cfg.hd
@@ -287,6 +369,20 @@ def attn_apply(
 
     new_cache = None
     if cache is not None:
+        if s == 1 and "k_pages" in cache:
+            out, new_cache = _paged_decode(q, k, v, cache, cache_len, block_tables, cfg, spec)
+            out = out.reshape(b, s, h * hd)
+            return out @ params["wo"].astype(cfg.compute_dtype), new_cache
+        if s > 1 and chunked:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_len, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_len, axis=1)
+            new_cache = {
+                "k": shard(ck, ("batch", "kv_seq", None, None)),
+                "v": shard(cv, ("batch", "kv_seq", None, None)),
+            }
+            out = _offset_prefill_attention(q, ck, cv, cache_len, cfg, spec)
+            out = out.reshape(b, s, h * hd)
+            return out @ params["wo"].astype(cfg.compute_dtype), new_cache
         if s == 1:
             if jnp.ndim(cache_len) == 1:
                 # per-slot decode: row i writes its token at its own position

@@ -118,6 +118,26 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
     return {f"pos{pos}": one(spec) for pos, spec in enumerate(cfg.pattern)}
 
 
+def init_paged_caches(cfg: ArchConfig, batch: int, num_pages: int, page: int) -> Dict[str, Any]:
+    """Paged decode state, dispatched per pattern position: attention gets a
+    block-table page pool (repeats, P, page, kv, hd) shared by all slots,
+    while SSM/RWKV state stays dense per slot — recurrent state is O(1) in
+    context length, so paging it buys nothing (paging is attention-only)."""
+
+    def one(spec: BlockSpec):
+        if spec.mixer == "attn":
+            base = attn_lib.init_paged_kv_cache(cfg, num_pages, page)
+        elif spec.mixer == "mamba":
+            base = ssm_lib.mamba_init_state(cfg, batch)
+        elif spec.mixer == "rwkv":
+            base = ssm_lib.rwkv_init_state(cfg, batch)
+        else:
+            base = {}
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.repeats,) + x.shape), base)
+
+    return {f"pos{pos}": one(spec) for pos, spec in enumerate(cfg.pattern)}
+
+
 def cache_shardings_logical(cfg: ArchConfig):
     """Logical axes of each cache leaf (for input_specs/dry-run)."""
 
@@ -156,12 +176,17 @@ def _apply_block(
     positions: Array,
     cache: Optional[Dict[str, Array]],
     cache_len: Optional[Array],
+    block_tables: Optional[Array] = None,
+    chunked_prefill: bool = False,
 ) -> Tuple[Array, Optional[Dict[str, Array]], Array]:
     aux = jnp.asarray(0.0, jnp.float32)
     h = rms_norm(x, p["norm1"], cfg.rms_eps)
     new_cache = cache
     if spec.mixer == "attn":
-        out, new_cache = attn_lib.attn_apply(p["attn"], h, cfg, spec, positions, cache, cache_len)
+        out, new_cache = attn_lib.attn_apply(
+            p["attn"], h, cfg, spec, positions, cache, cache_len,
+            block_tables=block_tables, chunked=chunked_prefill,
+        )
     elif spec.mixer == "mamba":
         out, new_cache = ssm_lib.mamba_apply(p["mamba"], h, cfg, cache)
     elif spec.mixer == "rwkv":
@@ -229,6 +254,8 @@ def forward(
     positions: Optional[Array] = None,
     caches: Optional[Dict[str, Any]] = None,
     cache_len: Optional[Array] = None,
+    block_tables: Optional[Array] = None,
+    chunked_prefill: bool = False,
 ) -> ModelOutput:
     x = _embed_inputs(params, cfg, tokens, embeds)
     b, s, _ = x.shape
@@ -254,7 +281,8 @@ def forward(
             name = f"pos{pos}"
             cache = layer_caches[name] if have_cache else None
             x, nc, a = _apply_block(
-                layer_params[name], x, cfg, spec, positions, cache, cache_len
+                layer_params[name], x, cfg, spec, positions, cache, cache_len,
+                block_tables=block_tables, chunked_prefill=chunked_prefill,
             )
             if have_cache:
                 new_caches[name] = nc if nc is not None else cache

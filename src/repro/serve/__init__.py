@@ -14,6 +14,12 @@ Layers (one module each):
   * ``slots``    — decode-step-granular slot pool (``SlotPool`` /
                    ``LMRequest``): free-list admission, per-slot positions,
                    occupancy accounting for continuous batching;
+  * ``paging``   — paged KV cache: ``PageAllocator`` (free-list of token
+                   pages, OOM-safe reservations, copy-on-retire compaction)
+                   + ``PagedKVManager`` (block tables, byte accounting) for
+                   ``ContinuousLMEngine(paged=True)``;
+  * ``sampling`` — per-request temperature/top-k decoding
+                   (``SamplingParams``; temp 0 == bit-exact greedy);
   * ``probes``   — ``DecorrProbe``: streaming (EMA) feature moments + the
                    training-oracle-exact R_off/R_sum health metrics via
                    ``repro.decorr.probe_metrics``;
@@ -41,11 +47,14 @@ from repro.serve.loadgen import (
     LMLoadConfig,
     LoadConfig,
     compare_lm_policies,
+    compare_paged_dense,
     compare_policies,
     run_microbatched,
     run_naive,
 )
+from repro.serve.paging import PageAllocator, PagedKVManager
 from repro.serve.probes import DecorrProbe
+from repro.serve.sampling import SamplingParams
 from repro.serve.service import EmbeddingService, LMService
 from repro.serve.slots import LMRequest, SlotPool
 
@@ -61,6 +70,9 @@ __all__ = [
     "LMService",
     "LoadConfig",
     "MicroBatcher",
+    "PageAllocator",
+    "PagedKVManager",
+    "SamplingParams",
     "ServeEngine",
     "ServeFuture",
     "SlotPool",
@@ -68,6 +80,7 @@ __all__ = [
     "bucket_shapes",
     "bucket_sizes",
     "compare_lm_policies",
+    "compare_paged_dense",
     "compare_policies",
     "run_microbatched",
     "run_naive",

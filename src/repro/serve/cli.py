@@ -14,6 +14,11 @@ scrape metrics.
     # continuous batching vs whole-request generate + probe oracle gate (CI)
     PYTHONPATH=src python -m repro.serve.cli --smoke --lm-arch gemma2-2b --continuous
 
+    # paged KV cache + chunked prefill + sampled decoding smoke (CI)
+    PYTHONPATH=src python -m repro.serve.cli --smoke --lm-arch gemma2-2b \
+        --continuous --paged --block-size 16 --prefill-chunk 16 \
+        --temperature 0.8 --top-k 8
+
 ``--pretune`` warms the repro.tune cache for the serve bucket shapes first —
 the same job list ``python -m repro.tune.cli --serve`` persists offline.
 """
@@ -138,11 +143,21 @@ def _run_lm(args) -> int:
 def _run_lm_continuous(args, cfg, params) -> int:
     """Continuous batching vs whole-request generate on a mixed-length
     workload, with the in-flight decorrelation probe replayed against the
-    offline oracle."""
+    offline oracle.  ``--paged`` routes the slot pool through the block-table
+    KV cache (page size from ``--block-size`` or the repro.tune winner) and
+    additionally gates paged-vs-dense peak cache bytes; ``--temperature`` /
+    ``--top-k`` run a sampled demo batch after the greedy gates."""
     from repro.decorr.config import DecorrConfig
     from repro.serve.loadgen import LMLoadConfig, compare_lm_policies
     from repro.serve.probes import DecorrProbe
 
+    engine_kw = {}
+    if args.paged:
+        # no prefill_chunk here: this comparison hard-gates BIT-identical
+        # tokens vs the whole-request oracle, and chunked prefill is only
+        # argmax-stable (different prefill einsum shapes) — chunking is
+        # exercised in _gate_paged's report-only pass instead
+        engine_kw = dict(paged=True, page_size=args.block_size)
     load = LMLoadConfig(n_requests=args.requests, seed=args.seed)
     probe_cfg = DecorrConfig(style=args.probe_style, reg="sum", q=2, block_size=args.probe_block)
     report = compare_lm_policies(
@@ -152,6 +167,7 @@ def _run_lm_continuous(args, cfg, params) -> int:
         n_slots=args.slots,
         probe_fn=lambda: DecorrProbe(probe_cfg),
         record_probe_rows=True,
+        engine_kw=engine_kw,
     )
     for name in ("whole_request", "continuous"):
         r = report[name]
@@ -171,6 +187,11 @@ def _run_lm_continuous(args, cfg, params) -> int:
         f"ttft_p50={m['ttft_p50_ms']:.2f}ms probe_steps={m.get('decorr_probe_steps', 0):.0f} "
         f"probe_oracle_rel_err={g.get('probe_oracle_rel_err', float('nan')):.2e}"
     )
+    paged_ok = True
+    if args.paged:
+        paged_ok = _gate_paged(args, cfg, params, load)
+    if args.temperature or args.top_k:
+        _demo_sampling(args, cfg, params)
     if args.json:
         print(json.dumps(report, indent=2, sort_keys=True, default=float))
     # fail-closed like benchmarks/compare.py: a probe that never fired a
@@ -181,8 +202,64 @@ def _run_lm_continuous(args, cfg, params) -> int:
         and g["token_mismatches"] == 0
         and probe_err is not None
         and probe_err < 1e-3
+        and paged_ok
     )
     return 0 if ok or not args.gate else 1
+
+
+def _gate_paged(args, cfg, params, load) -> bool:
+    """Dense vs paged at the same workload: identical tokens + peak cache
+    bytes strictly below the dense pool's permanent reservation."""
+    from repro.serve.loadgen import compare_paged_dense
+
+    rep = compare_paged_dense(
+        cfg, params, load,
+        n_slots=args.slots,
+        page_size=args.block_size or 16,
+        prefill_chunk=args.prefill_chunk,
+    )
+    g = rep["gate"]
+    print(
+        f"[serve] paged vs dense: peak_cache_bytes_ratio={g['peak_cache_bytes_ratio']:.3f} "
+        f"(paged<dense: {g['paged_peak_lt_dense']}, "
+        f"token mismatches: {g['token_mismatches']:.0f}, "
+        f"tok/s ratio {g['tok_per_s_ratio']:.2f})"
+    )
+    return bool(g["paged_peak_lt_dense"]) and g["token_mismatches"] == 0
+
+
+def _demo_sampling(args, cfg, params):
+    """A short sampled batch through the paged/dense pool: per-request
+    temperature/top-k/seed, reproducibility printed for two replays."""
+    from repro.serve.engine import ContinuousLMEngine
+    from repro.serve.service import LMService
+
+    import numpy as np
+
+    def run():
+        eng = ContinuousLMEngine(
+            cfg, params, n_slots=args.slots, max_len=64, max_prompt_len=24,
+            paged=args.paged, page_size=args.block_size if args.paged else None,
+            sampling=True,
+        )
+        svc = LMService(eng)
+        svc.warmup()
+        rng = np.random.default_rng(args.seed)
+        futs = [
+            svc.submit(
+                rng.integers(0, cfg.vocab_size, 8).astype(np.int32), 8,
+                temperature=args.temperature or 0.0, top_k=args.top_k, seed=i,
+            )
+            for i in range(4)
+        ]
+        svc.drain()
+        return [f.result(timeout=30).tolist() for f in futs]
+
+    a, b = run(), run()
+    print(
+        f"[serve] sampled decode (T={args.temperature}, top_k={args.top_k}): "
+        f"sample={a[0][:8]} reproducible={a == b}"
+    )
 
 
 def main(argv=None) -> int:
@@ -219,6 +296,20 @@ def main(argv=None) -> int:
                         "generate on a mixed-length workload")
     p.add_argument("--slots", type=int, default=8,
                    help="continuous-batching decode slot pool size")
+    p.add_argument("--paged", action="store_true",
+                   help="with --continuous: paged (block-table) KV cache; also "
+                        "gates paged peak cache bytes < dense")
+    p.add_argument("--block-size", type=int, default=None,
+                   help="KV page size in tokens (default: the repro.tune winner "
+                        "for the pool shape, fragmentation-capped)")
+    p.add_argument("--prefill-chunk", type=int, default=None,
+                   help="with --paged: prefill long prompts N tokens per decode "
+                        "tick instead of stalling the pool")
+    p.add_argument("--temperature", type=float, default=0.0,
+                   help="run a sampled demo batch after the greedy gates "
+                        "(0 = greedy only)")
+    p.add_argument("--top-k", type=int, default=None,
+                   help="restrict sampled decoding to the k highest logits")
     args = p.parse_args(argv)
 
     if args.smoke:

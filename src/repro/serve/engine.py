@@ -216,6 +216,27 @@ class ContinuousLMEngine:
     The decode step also returns the final hidden state of each slot's new
     token; the service samples the in-flight rows from it for the online
     decorrelation probes (``repro.decorr.probe.slot_probe_rows``).
+
+    Three orthogonal extensions over the PR 4 dense engine (each off by
+    default, leaving the dense greedy path's compiled graphs untouched):
+
+      * ``paged=True`` — the per-slot dense KV strips become fixed-size token
+        pages addressed through block tables (``repro.serve.paging``): decode
+        reads/writes gather/scatter over the tables (Pallas kernel on TPU via
+        ``kernels/paged_attention``), admission reserves pages OOM-safely,
+        retirement returns them and compacts.  SSM/RWKV state stays dense —
+        paging is attention-only, dispatched per pattern position.  Greedy
+        tokens are bit-identical to the dense engine when NB * page ==
+        max_len (the engine rounds max_len up to a page multiple).
+      * ``prefill_chunk=N`` (paged, attention-only patterns) — prompts longer
+        than N prefill N tokens per service tick into the batch-1 template,
+        interleaved with pool decode, so a long prompt no longer stalls
+        in-flight slots for a whole prefill; the finished prompt is scattered
+        into its pages like any other insert.
+      * ``sampling=True`` — prefill/decode executables return LOGITS instead
+        of in-jit argmax; the service draws tokens host-side per request
+        (``repro.serve.sampling``: temperature/top-k, per-request PRNG;
+        temperature 0 stays bit-identical greedy).
     """
 
     def __init__(
@@ -228,14 +249,24 @@ class ContinuousLMEngine:
         max_prompt_len: Optional[int] = None,
         prompt_align: int = 8,
         reset_on_retire: bool = True,
+        paged: bool = False,
+        page_size: Optional[int] = None,
+        total_pages: Optional[int] = None,
+        prefill_chunk: Optional[int] = None,
+        sampling: bool = False,
+        compact_on_retire: bool = True,
     ):
         from repro.models.transformer import init_caches
         from repro.serve.slots import SlotPool
         from repro.train.serve import (
+            apply_page_moves,
             insert_slot_state,
+            insert_slot_state_paged,
+            make_chunked_prefill_step,
             make_decode_step,
             make_prefill_at_step,
             reset_slot_state,
+            reset_slot_state_paged,
         )
 
         if arch_cfg.frontend == "audio_codes":
@@ -245,10 +276,45 @@ class ContinuousLMEngine:
             )
         self.cfg = arch_cfg
         self.params = params
-        self.pool = SlotPool(n_slots, max_len)
+        self.sampling_enabled = bool(sampling)
         self.reset_on_retire = reset_on_retire
+        self.compact_on_retire = compact_on_retire
         # right-padded prompt buckets only where causality hides the padding
         self.pad_prompts = all(spec.mixer == "attn" for spec in arch_cfg.pattern)
+
+        self.paged = bool(paged)
+        self.pager = None
+        if self.paged:
+            from repro.kernels.paged_attention.ops import auto_page_size
+            from repro.kernels.pallas_utils import next_multiple
+            from repro.serve.paging import PagedKVManager
+
+            page = int(
+                page_size
+                or auto_page_size(n_slots, max_len, arch_cfg.n_kv_heads, arch_cfg.hd)
+            )
+            # NB * page == max_len keeps the gathered context view the exact
+            # shape of the dense cache — that (plus masked rows' probability
+            # mass underflowing to 0.0) is what makes paged greedy decode
+            # bit-identical to the dense engine
+            max_len = next_multiple(max_len, page)
+            self.pager = PagedKVManager(
+                arch_cfg, n_slots, max_len, page, total_pages=total_pages
+            )
+
+        self.prefill_chunk = int(prefill_chunk) if prefill_chunk else None
+        if self.prefill_chunk is not None:
+            if not self.paged:
+                raise ValueError("prefill_chunk rides the paged machinery; pass paged=True")
+            if not self.pad_prompts:
+                raise ValueError(
+                    "chunked prefill needs attention-only patterns (recurrent "
+                    "mixers fold chunk padding into their state)"
+                )
+            if self.prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+
+        self.pool = SlotPool(n_slots, max_len)
         max_prompt = int(max_prompt_len or max(max_len // 2, prompt_align))
         if max_prompt >= max_len:
             raise ValueError(f"max_prompt_len={max_prompt} must leave decode room (< max_len={max_len})")
@@ -261,28 +327,64 @@ class ContinuousLMEngine:
                 f"(max_prompt_len={max_prompt} rounded up to align={prompt_align}) "
                 f"exceeds max_len={max_len}; lower max_prompt_len or raise max_len"
             )
+        if self.prefill_chunk is not None:
+            tail = -(-max_prompt // self.prefill_chunk) * self.prefill_chunk
+            if tail > max_len:
+                raise ValueError(
+                    f"chunked prefill of a max_prompt_len={max_prompt} prompt pads "
+                    f"to {tail} template rows > max_len={max_len}; shrink prefill_chunk"
+                )
 
-        self.caches = init_caches(arch_cfg, n_slots, max_len)
+        self.caches = self.pager.init_caches() if self.paged else init_caches(
+            arch_cfg, n_slots, max_len
+        )
         self._caches1 = init_caches(arch_cfg, 1, max_len)  # prefill template
 
         decode = make_decode_step(arch_cfg, return_hidden=True)
 
+        def _pick(logits):
+            if sampling:
+                return logits  # host-side sampler draws per request
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
         def _step(params, caches, cache_len, tokens):
             logits, hidden, caches = decode(params, caches, cache_len, tokens=tokens[:, None])
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), hidden, caches
+            return _pick(logits), hidden, caches
+
+        def _step_paged(params, caches, cache_len, tokens, block_tables):
+            logits, hidden, caches = decode(
+                params, caches, cache_len, tokens=tokens[:, None], block_tables=block_tables
+            )
+            return _pick(logits), hidden, caches
 
         prefill_at = make_prefill_at_step(arch_cfg)
 
         def _pre(params, caches1, tokens, true_len):
             logits, hidden, caches1 = prefill_at(params, caches1, tokens, true_len)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), hidden, caches1
+            return _pick(logits), hidden, caches1
 
         # one decode executable for the whole pool; prefill one per bucket
         # (the jit caches below ARE the AOT cache `warmup` fills)
-        self._decode = jax.jit(_step, donate_argnums=(1,))
+        self._decode = jax.jit(_step_paged if self.paged else _step, donate_argnums=(1,))
         self._prefill = jax.jit(_pre)
-        self._insert = jax.jit(insert_slot_state, donate_argnums=(0,))
-        self._reset = jax.jit(reset_slot_state, donate_argnums=(0,))
+        if self.paged:
+            self._insert = jax.jit(insert_slot_state_paged, donate_argnums=(0,))
+            self._reset = jax.jit(reset_slot_state_paged, donate_argnums=(0,))
+            self._moves = jax.jit(apply_page_moves, donate_argnums=(0,))
+        else:
+            self._insert = jax.jit(insert_slot_state, donate_argnums=(0,))
+            self._reset = jax.jit(reset_slot_state, donate_argnums=(0,))
+        # chunked prefill: ONE in-progress (slot_index, live batch-1 tree) at
+        # a time — chunks of different prompts serialize, decode interleaves
+        self._chunk_live: Optional[list] = None
+        if self.prefill_chunk is not None:
+            chunk_step = make_chunked_prefill_step(arch_cfg)
+
+            def _chunk(params, caches1, tokens, offset, last):
+                logits, hidden, caches1 = chunk_step(params, caches1, tokens, offset, last)
+                return _pick(logits), hidden, caches1
+
+            self._chunk_step = jax.jit(_chunk)
 
     # -- admission-side shape policy ----------------------------------------
 
@@ -299,7 +401,8 @@ class ContinuousLMEngine:
     def validate_request(self, prompt_len: int, max_new_tokens: int):
         """Submit-time admission check: reject (never hang) what cannot be
         scheduled — empty prompts, prompts beyond the largest bucket, and
-        requests that cannot fit the slot's cache rows."""
+        requests that cannot fit the slot's cache rows (or, paged, could not
+        get their pages even from an empty pool)."""
         if prompt_len < 1:
             raise ValueError("empty prompt: prompt_len must be >= 1")
         if max_new_tokens < 1:
@@ -309,17 +412,35 @@ class ContinuousLMEngine:
                 f"prompt_len={prompt_len} exceeds the largest prompt bucket "
                 f"({self.max_prompt_len}); rejecting instead of queueing unservable work"
             )
-        if prompt_len + max_new_tokens > self.pool.max_len:
+        # rows actually written: the final emitted token never lands in the
+        # cache, so a request that exactly fills it is admissible
+        rows = prompt_len + max_new_tokens - 1
+        if rows > self.pool.max_len:
             raise ValueError(
-                f"prompt_len + max_new_tokens = {prompt_len + max_new_tokens} "
+                f"prompt_len + max_new_tokens - 1 = {rows} "
                 f"exceeds the slot cache ({self.pool.max_len} rows)"
             )
+        if self.paged and not self.pager.fits_ever(prompt_len, max_new_tokens):
+            raise ValueError(
+                f"request needs {self.pager.alloc.pages_for_tokens(rows)} pages "
+                f"> the pool's {self.pager.alloc.usable_pages} usable pages; "
+                "rejecting instead of queueing unservable work"
+            )
+
+    def can_admit(self, request) -> bool:
+        """Decode-tick admission check beyond a free slot: paged pools also
+        need the request's worst-case page reservation to fit RIGHT NOW
+        (deferred, not rejected, otherwise — OOM-safe admission)."""
+        if not self.paged:
+            return True
+        return self.pager.can_admit(request.prompt_len, request.max_new_tokens)
 
     # -- compile cache -------------------------------------------------------
 
     def warmup(self, prompt_lens=None) -> Tuple[int, ...]:
         """AOT-compile every prompt-bucket prefill variant, the pool decode
-        step, and the slot insert/reset — so no admitted request traces.
+        step, the slot insert/reset (and, paged, the page-move / chunk-step
+        executables) — so no admitted request traces.
 
         Attention-only patterns warm the whole padded bucket ladder.
         Recurrent patterns prefill at exact lengths, so callers that know
@@ -332,40 +453,162 @@ class ContinuousLMEngine:
         for length in buckets:
             toks = jnp.zeros((1, length), jnp.int32)
             _, _, one = self._prefill(self.params, self._caches1, toks, np.int32(1))
-        self.caches = self._insert(self.caches, one, np.int32(0))
+        nb = 0 if not self.paged else self.pager.blocks_per_slot
+        if self.paged:
+            # all-sentinel table rows: warmup writes land on the scratch page
+            bt_row = jnp.zeros((nb,), jnp.int32)
+            self.caches = self._insert(self.caches, one, np.int32(0), bt_row)
+        else:
+            self.caches = self._insert(self.caches, one, np.int32(0))
         lens = jnp.zeros((self.pool.n_slots,), jnp.int32)
         toks = jnp.zeros((self.pool.n_slots,), jnp.int32)
-        _, _, self.caches = self._decode(self.params, self.caches, lens, toks)
-        self.caches = self._reset(self.caches, np.int32(0))
+        if self.paged:
+            bt = jnp.zeros((self.pool.n_slots, nb), jnp.int32)
+            _, _, self.caches = self._decode(self.params, self.caches, lens, toks, bt)
+            self.caches = self._reset(self.caches, np.int32(0), bt_row)
+            if self.compact_on_retire:
+                idx = jnp.zeros((nb,), jnp.int32)
+                self.caches = self._moves(self.caches, idx, idx)
+        else:
+            _, _, self.caches = self._decode(self.params, self.caches, lens, toks)
+            self.caches = self._reset(self.caches, np.int32(0))
+        if self.prefill_chunk is not None:
+            ctoks = jnp.zeros((1, self.prefill_chunk), jnp.int32)
+            self._chunk_step(self.params, self._caches1, ctoks, np.int32(0), np.int32(0))
         return buckets
 
     # -- slot mechanics ------------------------------------------------------
 
-    def insert(self, slot) -> Tuple[int, np.ndarray]:
+    def needs_chunking(self, prompt_len: int) -> bool:
+        return self.prefill_chunk is not None and prompt_len > self.prefill_chunk
+
+    def admit_slot(self, slot):
+        """Post-``pool.admit`` hook: charge the paged reservation and flag
+        chunked prompts as still-prefilling (``prefill_pos`` 0)."""
+        if self.paged:
+            self.pager.admit(slot.index, slot.request.prompt_len, slot.request.max_new_tokens)
+        if self.needs_chunking(slot.request.prompt_len):
+            slot.prefill_pos = 0
+
+    def _scatter_insert(self, slot, one):
+        if self.paged:
+            self.pager.ensure_rows(slot.index, slot.request.prompt_len)
+            bt_row = jnp.asarray(self.pager.table_row(slot.index))
+            self.caches = self._insert(self.caches, one, np.int32(slot.index), bt_row)
+        else:
+            self.caches = self._insert(self.caches, one, np.int32(slot.index))
+
+    def _first_output(self, out, hidden):
+        first = np.asarray(out)[0] if self.sampling_enabled else int(out[0])
+        return first, np.asarray(hidden, np.float32)
+
+    def insert(self, slot):
         """Prefill an admitted request and scatter its state into the slot.
-        Returns (first generated token, its hidden-state row (1, d_model)) —
-        the prefill already emits the request's first token (TTFT point)."""
+        Returns (first output, its hidden-state row (1, d_model)) — the
+        prefill already emits the request's first token (TTFT point); with
+        ``sampling`` the first output is the (V,) logits row the service
+        samples from instead of the token id."""
         req = slot.request
         n = req.prompt_len
         length = self._prompt_bucket(n)
         padded = np.zeros((1, length), np.int32)
         padded[0, :n] = np.asarray(req.tokens, np.int32)
-        tok, hidden, one = self._prefill(
+        out, hidden, one = self._prefill(
             self.params, self._caches1, jnp.asarray(padded), np.int32(n)
         )
-        self.caches = self._insert(self.caches, one, np.int32(slot.index))
-        return int(tok[0]), np.asarray(hidden, np.float32)
+        self._scatter_insert(slot, one)
+        return self._first_output(out, hidden)
+
+    def advance_prefill(self, slot):
+        """Run ONE chunk of the slot's incremental prefill.  Returns None
+        while the prompt is still streaming in; on the final chunk, scatters
+        the finished state into the slot's pages and returns the same
+        (first output, hidden row) contract as ``insert``.
+
+        Only one chunked prefill is live at a time (the batch-1 work tree);
+        other still-prefilling slots wait their turn while decode proceeds.
+        """
+        req = slot.request
+        n, c = req.prompt_len, self.prefill_chunk
+        if self._chunk_live is None:
+            self._chunk_live = [slot.index, self._caches1]
+        if self._chunk_live[0] != slot.index:
+            return None  # another prompt owns the work tree this tick
+        off = slot.prefill_pos
+        take = min(c, n - off)
+        padded = np.zeros((1, c), np.int32)
+        padded[0, :take] = np.asarray(req.tokens[off : off + take], np.int32)
+        out, hidden, tree = self._chunk_step(
+            self.params, self._chunk_live[1], jnp.asarray(padded),
+            np.int32(off), np.int32(take - 1),
+        )
+        self._chunk_live[1] = tree
+        slot.prefill_pos = off + take
+        if slot.prefilling:
+            return None
+        self._scatter_insert(slot, tree)
+        self._chunk_live = None
+        return self._first_output(out, hidden)
+
+    def prefilling_slot(self):
+        """The still-prefilling slot whose chunk should advance this tick:
+        the owner of the live work tree, else the oldest waiting one."""
+        waiting = [s for s in self.pool.active() if s.prefilling]
+        if not waiting:
+            return None
+        if self._chunk_live is not None:
+            for s in waiting:
+                if s.index == self._chunk_live[0]:
+                    return s
+        return waiting[0]
 
     def decode_step(self) -> Tuple[np.ndarray, np.ndarray]:
-        """One batched decode over the whole pool.  Returns (next token per
-        slot (N,), hidden rows (N, d_model)); free-slot lanes are garbage the
-        caller must mask by the pool's active indices."""
+        """One batched decode over the whole pool.  Returns (next output per
+        slot — (N,) token ids, or (N, V) logits under ``sampling`` — and
+        hidden rows (N, d_model)); free-slot and still-prefilling lanes are
+        garbage the caller must mask by ``pool.decoding_indices()``."""
         lens = jnp.asarray(self.pool.cache_lens())
         toks = jnp.asarray(self.pool.last_tokens())
-        next_tok, hidden, self.caches = self._decode(self.params, self.caches, lens, toks)
-        return np.asarray(next_tok), np.asarray(hidden, np.float32)
+        if self.paged:
+            for i in self.pool.decoding_indices():
+                # lazy page growth: bind the write target's page (cannot
+                # fail — admission reserved the worst case)
+                self.pager.ensure_rows(i, self.pool[i].pos + 1)
+            bt = jnp.asarray(self.pager.block_tables())
+            out, hidden, self.caches = self._decode(self.params, self.caches, lens, toks, bt)
+        else:
+            out, hidden, self.caches = self._decode(self.params, self.caches, lens, toks)
+        return np.asarray(out), np.asarray(hidden, np.float32)
+
+    def abort_slot(self, index: int):
+        """Host-side-only cleanup for a slot whose device step failed: drop
+        any in-progress chunked prefill it owns and hand back its pages +
+        reservation.  No device ops — the device may be wedged, and a stale
+        ``_chunk_live`` would otherwise wedge every later chunked prefill
+        on a reused slot index."""
+        if self._chunk_live is not None and self._chunk_live[0] == index:
+            self._chunk_live = None
+        if self.paged:
+            self.pager.release(index)
 
     def release(self, index: int):
-        """Zero a retired slot's cache rows (hygiene; decode masks them)."""
+        """Retire a slot: zero its cache rows (hygiene; decode masks them),
+        return its pages + reservation, and compact the page pool
+        (copy-on-retire: the highest in-use pages relocate into the freed
+        low holes, keeping the live frontier tight)."""
+        if self._chunk_live is not None and self._chunk_live[0] == index:
+            self._chunk_live = None
+        if self.paged:
+            if self.reset_on_retire:
+                bt_row = jnp.asarray(self.pager.table_row(index))
+                self.caches = self._reset(self.caches, np.int32(index), bt_row)
+            self.pager.release(index)
+            if self.compact_on_retire:
+                src, dst = self.pager.plan_compaction()
+                if src.size:
+                    self.caches = self._moves(
+                        self.caches, jnp.asarray(src), jnp.asarray(dst)
+                    )
+            return
         if self.reset_on_retire:
             self.caches = self._reset(self.caches, np.int32(index))

@@ -229,22 +229,29 @@ def compare_lm_policies(
     max_len: Optional[int] = None,
     probe_fn=None,
     record_probe_rows: bool = False,
+    engine_kw: Optional[Dict] = None,
 ) -> Dict[str, Dict[str, float]]:
     """Whole-request generate vs continuous batching on one mixed-length
     workload.  Also cross-checks correctness: both policies must emit
     IDENTICAL token streams per request (greedy decoding is deterministic;
-    slot interleaving must not change any request's result)."""
+    slot interleaving must not change any request's result).  ``engine_kw``
+    forwards continuous-engine extensions (``paged=True``, ``page_size``,
+    ``prefill_chunk``, ...) — the token-identity gate applies to them too."""
     from repro.serve.engine import ContinuousLMEngine, LMServeEngine
     from repro.serve.service import LMService
 
     max_len = int(max_len or max(load.max_request_len + 8, 32))
+    engine = ContinuousLMEngine(
+        arch_cfg, params, n_slots=n_slots, max_len=max_len,
+        max_prompt_len=max(load.prompt_lens), **(engine_kw or {}),
+    )
+    # the paged engine rounds max_len up to a page multiple; the oracle must
+    # decode at the SAME cache extent or reduction shapes (and, potentially,
+    # last-ulp tie-breaks) diverge from the bit-identity the gate demands
+    max_len = engine.pool.max_len
     whole_engine = LMServeEngine(arch_cfg)
     whole, whole_outs = run_whole_request(whole_engine, params, load, max_len)
 
-    engine = ContinuousLMEngine(
-        arch_cfg, params, n_slots=n_slots, max_len=max_len,
-        max_prompt_len=max(load.prompt_lens),
-    )
     probe = probe_fn() if probe_fn is not None else None
     service = LMService(engine, probe=probe, record_probe_rows=record_probe_rows)
     cont, cont_outs = run_continuous(service, load)
@@ -267,6 +274,71 @@ def compare_lm_policies(
         err = lm_probe_oracle_err(service)
         if err is not None:
             out["gate"]["probe_oracle_rel_err"] = err
+    return out
+
+
+def compare_paged_dense(
+    arch_cfg,
+    params,
+    load: LMLoadConfig,
+    *,
+    n_slots: int = 8,
+    max_len: Optional[int] = None,
+    page_size: int = 16,
+    prefill_chunk: Optional[int] = None,
+) -> Dict[str, Dict[str, float]]:
+    """Dense vs paged continuous batching on one (typically length-skewed)
+    workload: identical greedy tokens per request, tok/s for both, and the
+    memory story — the paged pool's PEAK allocated cache bytes against the
+    dense pool's permanent ``n_slots * max_len`` row reservation.  A second
+    paged run with chunked prefill reports its own tokens/mismatches (the
+    chunk boundary changes prefill einsum shapes, so that run is argmax-
+    stable rather than bit-pinned — mismatches are reported, the hard gate
+    rides the unchunked run)."""
+    from repro.serve.engine import ContinuousLMEngine
+    from repro.serve.paging import dense_cache_bytes
+    from repro.serve.service import LMService
+
+    max_len = int(max_len or max(load.max_request_len + 8, 32))
+    max_len = -(-max_len // page_size) * page_size  # identical shapes both ways
+
+    def run(**engine_kw):
+        engine = ContinuousLMEngine(
+            arch_cfg, params, n_slots=n_slots, max_len=max_len,
+            max_prompt_len=max(load.prompt_lens), **engine_kw,
+        )
+        service = LMService(engine)
+        summary, outs = run_continuous(service, load)
+        return summary, outs, service
+
+    dense, dense_outs, _ = run()
+    paged, paged_outs, paged_svc = run(paged=True, page_size=page_size)
+    mismatches = sum(
+        1 for a, b in zip(dense_outs, paged_outs) if not np.array_equal(a, b)
+    )
+    dense_bytes = dense_cache_bytes(arch_cfg, n_slots, max_len)
+    peak_bytes = paged_svc.engine.pager.peak_cache_bytes()
+    out = {
+        "dense": dict(dense, cache_bytes=float(dense_bytes)),
+        "paged": dict(paged, **paged_svc.engine.pager.metrics()),
+        "gate": {
+            "token_mismatches": float(mismatches),
+            "paged_peak_lt_dense": bool(peak_bytes < dense_bytes),
+            "peak_cache_bytes_ratio": peak_bytes / max(dense_bytes, 1),
+            "tok_per_s_ratio": paged["tok_per_s"] / max(dense["tok_per_s"], 1e-9),
+        },
+    }
+    if prefill_chunk:
+        chunked, chunked_outs, chunked_svc = run(
+            paged=True, page_size=page_size, prefill_chunk=prefill_chunk
+        )
+        out["paged_chunked"] = dict(
+            chunked,
+            token_mismatches=float(
+                sum(1 for a, b in zip(dense_outs, chunked_outs) if not np.array_equal(a, b))
+            ),
+            ttft_p50_ms=chunked_svc.metrics()["ttft_p50_ms"],
+        )
     return out
 
 

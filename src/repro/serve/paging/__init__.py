@@ -1,0 +1,37 @@
+"""repro.serve.paging — paged KV cache for the continuous-batching slot pool.
+
+The dense pool (PR 4) reserves one ``max_len`` cache row-strip per slot, so a
+single long request dictates memory for the whole pool.  This package
+replaces that with fixed-size token *pages* handed out by a free-list
+allocator and addressed through per-slot block tables:
+
+  * ``allocator`` — host-side bookkeeping: ``PageAllocator`` (min-heap free
+    list, reservation-based OOM-safe admission, copy-on-retire compaction
+    planning), sentinel page 0 for unassigned table entries;
+  * ``manager``   — ``PagedKVManager``: the (n_slots, NB) block-table array
+    the decode step consumes, device-pool construction via
+    ``models.transformer.init_paged_caches``, and the byte accounting the
+    bench gate compares against the dense pool.
+
+The tensor half lives in ``models/attention.py`` (block-table gather/scatter
+decode, Pallas kernel in ``kernels/paged_attention`` on TPU), the jitted slot
+surgery in ``repro.train.serve`` (``insert_slot_state_paged`` /
+``reset_slot_state_paged`` / ``apply_page_moves``), and the scheduling in
+``serve.ContinuousLMEngine(paged=True)`` / ``serve.LMService``.
+"""
+
+from repro.serve.paging.allocator import SENTINEL, PageAllocator, pages_for
+from repro.serve.paging.manager import (
+    PagedKVManager,
+    attn_kv_bytes_per_row,
+    dense_cache_bytes,
+)
+
+__all__ = [
+    "PageAllocator",
+    "PagedKVManager",
+    "SENTINEL",
+    "attn_kv_bytes_per_row",
+    "dense_cache_bytes",
+    "pages_for",
+]

@@ -1,0 +1,180 @@
+"""Host-side page allocator + block tables for the paged KV cache.
+
+Pure bookkeeping (no jax): a free list of fixed-size token pages over one
+physical pool, per-slot block tables (logical block j -> physical page id),
+reservation-based admission accounting, and copy-on-retire compaction
+planning.  The tensor half — the (repeats, P, page, kv, hd) device pools and
+the gather/scatter decode — lives in ``repro.serve.paging.manager`` and
+``repro.models.attention``.
+
+Design points:
+
+  * **Sentinel page 0.**  Physical page 0 is never allocated; unassigned
+    block-table entries point at it.  Gathers through those entries read
+    arbitrary bytes that the decode mask zeroes exactly (probability mass
+    underflows to 0.0 at NEG_INF), so a partially-filled table is always
+    safe to hand to the kernel.
+  * **Reservation accounting (OOM-safe admission).**  ``reserve`` charges a
+    request's worst case — ceil((prompt + max_new - 1) / page) pages — before
+    its slot is admitted; physical pages are drawn lazily as tokens are
+    written (``ensure``), but never beyond the reservation, so a mid-decode
+    allocation can never fail.  When a reservation does not fit, admission
+    is deferred (the service keeps the request queued) and ``submit`` raises
+    ``Backpressure`` once the queue itself fills — requests shed, never OOM.
+  * **Low-id pressure + compaction.**  The free list is a min-heap, so
+    allocation always takes the lowest free id and the in-use *frontier*
+    (highest id + 1) stays tight on its own; ``plan_compaction`` additionally
+    relocates the highest in-use pages into lower free holes after a retire
+    (copy-on-retire), handing back (src, dst) moves for the device-side copy
+    and rewriting the block tables to match.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Tuple
+
+SENTINEL = 0
+
+
+def pages_for(n_tokens: int, page: int) -> int:
+    return -(-max(int(n_tokens), 0) // page)
+
+
+class PageAllocator:
+    """Free-list allocator of fixed-size KV pages with per-slot block tables."""
+
+    def __init__(self, total_pages: int, page: int, n_slots: int, blocks_per_slot: int):
+        assert total_pages >= 2, "need at least the sentinel plus one usable page"
+        assert page >= 1 and n_slots >= 1 and blocks_per_slot >= 1
+        self.page = int(page)
+        self.total_pages = int(total_pages)
+        self.n_slots = int(n_slots)
+        self.blocks_per_slot = int(blocks_per_slot)
+        self._free: List[int] = list(range(1, total_pages))  # 0 is the sentinel
+        heapq.heapify(self._free)
+        self._tables: List[List[int]] = [[] for _ in range(n_slots)]
+        self._reserved: List[int] = [0] * n_slots
+        self.reserved_total = 0
+        self.in_use = 0
+        self.peak_pages = 0  # high-water mark of concurrently allocated pages
+        self.alloc_total = 0
+        self.compaction_moves = 0
+
+    # -- capacity / admission accounting -------------------------------------
+
+    @property
+    def usable_pages(self) -> int:
+        return self.total_pages - 1  # minus the sentinel
+
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for_tokens(self, n_tokens: int) -> int:
+        return pages_for(n_tokens, self.page)
+
+    def can_reserve(self, n_tokens: int) -> bool:
+        """Would a worst-case reservation for ``n_tokens`` rows fit right now?"""
+        return self.reserved_total + self.pages_for_tokens(n_tokens) <= self.usable_pages
+
+    def fits_ever(self, n_tokens: int) -> bool:
+        """Could the request be served by an EMPTY pool (submit-time check)?"""
+        need = self.pages_for_tokens(n_tokens)
+        return need <= min(self.usable_pages, self.blocks_per_slot)
+
+    def reserve(self, slot: int, n_tokens: int) -> int:
+        """Charge the slot's worst-case page need against the pool; the caller
+        must have checked ``can_reserve`` (admission is deferred otherwise)."""
+        need = self.pages_for_tokens(n_tokens)
+        if self.reserved_total + need > self.usable_pages:
+            raise RuntimeError(
+                f"page reservation overflow: {need} pages requested, "
+                f"{self.usable_pages - self.reserved_total} unreserved"
+            )
+        assert self._reserved[slot] == 0 and not self._tables[slot], slot
+        self._reserved[slot] = need
+        self.reserved_total += need
+        return need
+
+    # -- allocation -----------------------------------------------------------
+
+    def table(self, slot: int) -> List[int]:
+        return list(self._tables[slot])
+
+    def ensure(self, slot: int, n_tokens: int) -> List[Tuple[int, int]]:
+        """Grow slot's table to cover ``n_tokens`` written rows.  Returns the
+        newly bound (logical_block, physical_page) pairs.  Never exceeds the
+        slot's reservation, so the heap pop cannot fail."""
+        tbl = self._tables[slot]
+        need = self.pages_for_tokens(n_tokens)
+        if need > self._reserved[slot]:
+            raise RuntimeError(
+                f"slot {slot} needs {need} pages > reservation {self._reserved[slot]}"
+            )
+        added = []
+        while len(tbl) < need:
+            phys = heapq.heappop(self._free)
+            added.append((len(tbl), phys))
+            tbl.append(phys)
+            self.in_use += 1
+            self.alloc_total += 1
+        self.peak_pages = max(self.peak_pages, self.in_use)
+        return added
+
+    def release(self, slot: int):
+        """Return the slot's pages and reservation to the pool (retirement)."""
+        for phys in self._tables[slot]:
+            heapq.heappush(self._free, phys)
+        self.in_use -= len(self._tables[slot])
+        self._tables[slot] = []
+        self.reserved_total -= self._reserved[slot]
+        self._reserved[slot] = 0
+
+    # -- compaction -----------------------------------------------------------
+
+    def frontier(self) -> int:
+        """One past the highest in-use physical page id (the pool's live
+        extent; what a shrinkable backing allocation would have to cover)."""
+        top = SENTINEL
+        for tbl in self._tables:
+            for phys in tbl:
+                top = max(top, phys)
+        return top + 1
+
+    def plan_compaction(self, max_moves: int) -> List[Tuple[int, int]]:
+        """Relocate up to ``max_moves`` of the highest in-use pages into the
+        lowest free holes below them.  Rewrites the block tables and the free
+        list; returns the (src, dst) physical moves the device pools must
+        apply (``manager.apply_moves``).  No-op when already compact."""
+        # position index: physical page -> (slot, logical block)
+        where: Dict[int, Tuple[int, int]] = {}
+        for s, tbl in enumerate(self._tables):
+            for j, phys in enumerate(tbl):
+                where[phys] = (s, j)
+        moves: List[Tuple[int, int]] = []
+        while len(moves) < max_moves and self._free and where:
+            dst = self._free[0]
+            src = max(where)
+            if dst >= src:
+                break  # every free hole is above every in-use page: compact
+            heapq.heappop(self._free)
+            s, j = where.pop(src)
+            self._tables[s][j] = dst
+            where[dst] = (s, j)
+            heapq.heappush(self._free, src)
+            moves.append((src, dst))
+        self.compaction_moves += len(moves)
+        return moves
+
+    # -- scrape surface -------------------------------------------------------
+
+    def metrics(self, prefix: str = "pages_") -> Dict[str, float]:
+        return {
+            f"{prefix}total": float(self.usable_pages),
+            f"{prefix}in_use": float(self.in_use),
+            f"{prefix}reserved": float(self.reserved_total),
+            f"{prefix}peak": float(self.peak_pages),
+            f"{prefix}frontier": float(self.frontier() - 1),
+            f"{prefix}alloc_total": float(self.alloc_total),
+            f"{prefix}compaction_moves": float(self.compaction_moves),
+        }

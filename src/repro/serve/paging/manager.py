@@ -1,0 +1,144 @@
+"""PagedKVManager: the bridge between the host-side ``PageAllocator`` and
+the device-side page pools.
+
+Owns the (n_slots, NB) block-table array the decode step consumes, the
+admission/reservation bookkeeping per slot, and the byte accounting the
+bench gate compares against the dense pool.  The device trees themselves are
+built by ``models.transformer.init_paged_caches`` (attention positions get
+page pools, recurrent state stays dense) and mutated by the jitted surgery
+in ``repro.train.serve`` (``insert_slot_state_paged`` / ``reset_slot_state_paged``
+/ ``apply_page_moves``) — the manager only decides WHICH pages those touch.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.paging.allocator import SENTINEL, PageAllocator
+
+
+def attn_kv_bytes_per_row(cfg) -> int:
+    """Bytes of K+V cache per context row across the whole layer stack
+    (attention pattern positions only — recurrent state has no row axis)."""
+    n_attn = sum(1 for spec in cfg.pattern if spec.mixer == "attn")
+    dtype_bytes = np.dtype(cfg.compute_dtype).itemsize
+    return 2 * n_attn * cfg.repeats * cfg.n_kv_heads * cfg.hd * dtype_bytes
+
+
+def dense_cache_bytes(cfg, n_slots: int, max_len: int) -> int:
+    """What the PR 4 dense pool permanently holds for its attention caches."""
+    return attn_kv_bytes_per_row(cfg) * n_slots * max_len
+
+
+class PagedKVManager:
+    """Block tables + reservation accounting for one slot pool."""
+
+    def __init__(
+        self,
+        cfg,
+        n_slots: int,
+        max_len: int,
+        page: int,
+        total_pages: Optional[int] = None,
+    ):
+        assert max_len % page == 0, (
+            f"max_len={max_len} must be a multiple of the page size {page} "
+            "(the engine rounds up at construction)"
+        )
+        if not any(spec.mixer == "attn" for spec in cfg.pattern):
+            raise ValueError(
+                "paged KV cache needs at least one attention position in the "
+                "pattern; SSM/RWKV state is O(1) per slot and is never paged"
+            )
+        self.cfg = cfg
+        self.n_slots = int(n_slots)
+        self.max_len = int(max_len)
+        self.page = int(page)
+        self.blocks_per_slot = max_len // page
+        # +1: the sentinel page.  The default pool matches dense capacity —
+        # the memory win comes from sizing total_pages to the workload (the
+        # bench does) while reservation accounting keeps admission OOM-safe.
+        self.total_pages = int(total_pages or (self.n_slots * self.blocks_per_slot + 1))
+        self.alloc = PageAllocator(self.total_pages, page, n_slots, self.blocks_per_slot)
+
+    # -- device tree construction --------------------------------------------
+
+    def init_caches(self):
+        from repro.models.transformer import init_paged_caches
+
+        return init_paged_caches(self.cfg, self.n_slots, self.total_pages, self.page)
+
+    # -- block tables ---------------------------------------------------------
+
+    def table_row(self, slot: int) -> np.ndarray:
+        """(NB,) int32 physical page ids for one slot, sentinel-padded."""
+        row = np.full((self.blocks_per_slot,), SENTINEL, np.int32)
+        tbl = self.alloc.table(slot)
+        row[: len(tbl)] = tbl
+        return row
+
+    def block_tables(self) -> np.ndarray:
+        """(n_slots, NB) int32 — what every paged decode step consumes."""
+        return np.stack([self.table_row(s) for s in range(self.n_slots)], axis=0)
+
+    # -- admission / growth / retirement --------------------------------------
+
+    def rows_needed(self, prompt_len: int, max_new_tokens: int) -> int:
+        # the final emitted token is never written (same row accounting as
+        # the dense pool's admission check)
+        return prompt_len + max_new_tokens - 1
+
+    def fits_ever(self, prompt_len: int, max_new_tokens: int) -> bool:
+        return self.alloc.fits_ever(self.rows_needed(prompt_len, max_new_tokens))
+
+    def can_admit(self, prompt_len: int, max_new_tokens: int) -> bool:
+        return self.alloc.can_reserve(self.rows_needed(prompt_len, max_new_tokens))
+
+    def admit(self, slot: int, prompt_len: int, max_new_tokens: int):
+        self.alloc.reserve(slot, self.rows_needed(prompt_len, max_new_tokens))
+
+    def ensure_rows(self, slot: int, n_rows: int) -> List[Tuple[int, int]]:
+        """Guarantee the slot's table covers ``n_rows`` written rows."""
+        return self.alloc.ensure(slot, n_rows)
+
+    def release(self, slot: int):
+        self.alloc.release(slot)
+
+    def plan_compaction(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Fixed-width (src, dst) move vectors (identity-padded) for
+        ``train.serve.apply_page_moves``; empty arrays when already compact."""
+        moves = self.alloc.plan_compaction(self.blocks_per_slot)
+        if not moves:
+            return np.zeros((0,), np.int32), np.zeros((0,), np.int32)
+        src = np.full((self.blocks_per_slot,), SENTINEL, np.int32)
+        dst = np.full((self.blocks_per_slot,), SENTINEL, np.int32)
+        for i, (s, d) in enumerate(moves):
+            src[i], dst[i] = s, d
+        return src, dst
+
+    # -- byte accounting -------------------------------------------------------
+
+    @property
+    def page_bytes(self) -> int:
+        return attn_kv_bytes_per_row(self.cfg) * self.page
+
+    def peak_cache_bytes(self) -> int:
+        """High-water mark of concurrently allocated page bytes — the paged
+        counterpart of the dense pool's permanent n_slots * max_len rows."""
+        return self.alloc.peak_pages * self.page_bytes
+
+    def pool_cache_bytes(self) -> int:
+        return self.alloc.usable_pages * self.page_bytes
+
+    def dense_equiv_bytes(self) -> int:
+        return dense_cache_bytes(self.cfg, self.n_slots, self.max_len)
+
+    def metrics(self, prefix: str = "paged_") -> Dict[str, float]:
+        out = {f"{prefix}{k}": v for k, v in self.alloc.metrics(prefix="pages_").items()}
+        out[f"{prefix}page_tokens"] = float(self.page)
+        out[f"{prefix}peak_cache_bytes"] = float(self.peak_cache_bytes())
+        out[f"{prefix}pool_cache_bytes"] = float(self.pool_cache_bytes())
+        out[f"{prefix}dense_equiv_bytes"] = float(self.dense_equiv_bytes())
+        return out

@@ -33,6 +33,7 @@ from repro.serve.batcher import MicroBatcher, Request, ServeFuture
 from repro.serve.buckets import BucketPolicy
 from repro.serve.engine import ContinuousLMEngine, ServeEngine
 from repro.serve.probes import DecorrProbe
+from repro.serve.sampling import SamplingParams, sample_token
 from repro.serve.slots import LMRequest
 
 HEARTBEAT_NAME = "serve.dispatch"
@@ -259,6 +260,10 @@ class LMService:
         self.heartbeat.register(HEARTBEAT_LM, heartbeat_timeout_s)
         self._thread: Optional[threading.Thread] = None
         self._errors = 0
+        # head-of-line buffer for paged admission: requests popped from the
+        # queue whose page reservation does not fit yet wait here in FIFO
+        # order (deferred, never dropped or reordered past)
+        self._pending: List[Request] = []
         # bench/test hook: keep the exact rows fed to the probe, in order,
         # so probe readings can be replayed against the offline oracle
         self.record_probe_rows = record_probe_rows
@@ -272,18 +277,36 @@ class LMService:
         max_new_tokens: int,
         *,
         eos_id: Optional[int] = None,
+        temperature: float = 0.0,
+        top_k: Optional[int] = None,
+        seed: Optional[int] = None,
         block: bool = False,
         timeout: Optional[float] = None,
     ) -> ServeFuture:
         """Queue one generation request.  Raises ``ValueError`` immediately
         for unservable requests (empty prompt, prompt beyond the largest
-        bucket, cache overflow) — reject, never hang — and ``Backpressure``
-        when the queue is at ``max_queue``."""
+        bucket, cache/page-pool overflow, sampling on a greedy-only engine)
+        — reject, never hang — and ``Backpressure`` when the queue is at
+        ``max_queue``.  ``temperature``/``top_k``/``seed`` select per-request
+        sampled decoding (temperature 0 = greedy, bit-identical to the
+        argmax path)."""
         tokens = np.asarray(tokens, np.int32)
         if tokens.ndim != 1:
             raise ValueError(f"prompt must be a 1-D token id array, got shape {tokens.shape}")
         self.engine.validate_request(int(tokens.shape[0]), int(max_new_tokens))
-        req = LMRequest(tokens=tokens, max_new_tokens=int(max_new_tokens), eos_id=eos_id)
+        sampling = None
+        if temperature or top_k or seed is not None:
+            sampling = SamplingParams(
+                temperature=float(temperature), top_k=top_k, seed=seed
+            ).validate()
+            if not sampling.greedy and not self.engine.sampling_enabled:
+                raise ValueError(
+                    "temperature > 0 needs an engine built with sampling=True "
+                    "(the greedy engine keeps argmax inside the decode executable)"
+                )
+        req = LMRequest(
+            tokens=tokens, max_new_tokens=int(max_new_tokens), eos_id=eos_id, sampling=sampling
+        )
         return self.batcher.submit(req, block=block, timeout=timeout)
 
     # -- decode-step tick ---------------------------------------------------
@@ -302,36 +325,70 @@ class LMService:
         self.stats.observe_batch([slot.future.latency_s])
         self.engine.release(slot.index)
 
+    def _pick_token(self, slot, out) -> int:
+        """out: a token id (greedy engine) or a (V,) logits row (sampling
+        engine) — drawn with the request's own params + PRNG stream."""
+        if not self.engine.sampling_enabled:
+            return int(out)
+        return sample_token(out, slot.request.sampling, slot.rng)
+
+    def _emit_first(self, slot, out, hidden_row):
+        """Common tail of whole-prompt insert and final-chunk completion:
+        TTFT, probe feed, first-token emit, possible immediate retirement."""
+        self._ttft.append(time.perf_counter() - slot.future.t_submit)
+        self._feed_probe(hidden_row)
+        if slot.emit(self._pick_token(slot, out)):
+            self._finish(self.engine.pool.retire(slot.index))
+
     def step(self, timeout: float = 0.0) -> Optional[int]:
-        """One scheduler tick: admit into freed slots, decode the pool once,
-        retire finished requests.  Returns in-flight work after the tick
-        (admitted + still-active slots), or None once ``shutdown`` has been
-        signalled and everything drained."""
+        """One scheduler tick: admit into freed slots (deferring requests
+        whose page reservation does not fit yet), advance at most one chunk
+        of an in-progress chunked prefill, decode the pool once, retire
+        finished requests.  Returns in-flight work after the tick, or None
+        once ``shutdown`` has been signalled and everything drained."""
         from repro.decorr.probe import slot_probe_rows
 
         pool = self.engine.pool
-        reqs = self.batcher.next_requests(pool.free_slots(), timeout=timeout)
+        want = max(pool.free_slots() - len(self._pending), 0)
+        reqs = self.batcher.next_requests(want, timeout=timeout)
         shutting_down = reqs is None
-        for r in reqs or []:
+        self._pending.extend(reqs or [])
+        while self._pending and pool.free_slots():
+            if not self.engine.can_admit(self._pending[0].x):
+                break  # FIFO: later arrivals must not starve the head
+            r = self._pending.pop(0)
             slot = pool.admit(r.x, r.future)
+            self.engine.admit_slot(slot)
+            if slot.prefilling:
+                continue  # chunked: first token arrives when the prompt is in
             try:
-                tok, hidden_row = self.engine.insert(slot)
+                out, hidden_row = self.engine.insert(slot)
             except Exception as e:  # pragma: no cover - device failure path
                 self._errors += 1
+                self.engine.abort_slot(slot.index)
                 pool.retire(slot.index)
                 r.future.set_exception(e)
                 continue
-            self._ttft.append(time.perf_counter() - r.future.t_submit)
-            self._feed_probe(hidden_row)
-            if slot.emit(tok):
-                self._finish(pool.retire(slot.index))
-        active = pool.active_indices()
-        if active:
+            self._emit_first(slot, out, hidden_row)
+        chunk_slot = self.engine.prefilling_slot() if self.engine.prefill_chunk else None
+        if chunk_slot is not None:
             try:
-                next_tok, hidden = self.engine.decode_step()
+                res = self.engine.advance_prefill(chunk_slot)
             except Exception as e:  # pragma: no cover - device failure path
                 self._errors += 1
-                for i in active:
+                self.engine.abort_slot(chunk_slot.index)
+                pool.retire(chunk_slot.index).future.set_exception(e)
+            else:
+                if res is not None:
+                    self._emit_first(chunk_slot, *res)
+        active = pool.decoding_indices()
+        if active:
+            try:
+                next_out, hidden = self.engine.decode_step()
+            except Exception as e:  # pragma: no cover - device failure path
+                self._errors += 1
+                for i in pool.active_indices():
+                    self.engine.abort_slot(i)
                     pool.retire(i).future.set_exception(e)
             else:
                 # occupancy counts the lanes that actually decoded this step
@@ -339,18 +396,20 @@ class LMService:
                 pool.observe_step()
                 self._feed_probe(slot_probe_rows(hidden, active))
                 for i in active:
-                    if pool[i].emit(int(next_tok[i])):
+                    if pool[i].emit(self._pick_token(pool[i], next_out[i])):
                         self._finish(pool.retire(i))
         self.heartbeat.beat(HEARTBEAT_LM)
-        if shutting_down and not pool.active():
+        if shutting_down and not pool.active() and not self._pending:
             return None
-        return len(reqs or []) + len(active)
+        return len(self._pending) + len(pool.active())
 
     def drain(self, max_steps: int = 1_000_000) -> int:
         """Synchronously tick until the queue and the pool are empty (the
         deterministic closed-loop entry point).  Returns ticks run."""
         ran = 0
-        while ran < max_steps and (self.batcher.depth() or self.engine.pool.active()):
+        while ran < max_steps and (
+            self.batcher.depth() or self._pending or self.engine.pool.active()
+        ):
             self.step(timeout=0.0)
             ran += 1
         return ran
@@ -401,6 +460,9 @@ class LMService:
             "ttft_p99_ms": float(np.percentile(ttft, 99) * 1e3),
         }
         out.update(self.engine.pool.metrics())
+        if self.engine.paged:
+            out["admission_deferred"] = float(len(self._pending))
+            out.update(self.engine.pager.metrics())
         out.update(self.stats.metrics())
         out.update(self.heartbeat.metrics())
         if self.probe is not None:

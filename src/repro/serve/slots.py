@@ -30,30 +30,44 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.serve.sampling import SamplingParams, make_rng
+
 
 @dataclasses.dataclass
 class LMRequest:
     """One queued generation request (the batcher payload).
 
     ``tokens``: 1-D int prompt; ``max_new_tokens`` >= 1 caps generation;
-    ``eos_id`` (optional) retires the request early when emitted.
+    ``eos_id`` (optional) retires the request early when emitted;
+    ``sampling`` (optional) carries the per-request temperature/top-k/seed —
+    None means greedy through the argmax path.
     """
 
     tokens: np.ndarray
     max_new_tokens: int
     eos_id: Optional[int] = None
+    sampling: Optional[SamplingParams] = None
 
     @property
     def prompt_len(self) -> int:
         return int(np.shape(self.tokens)[0])
 
+    @property
+    def rows_needed(self) -> int:
+        """Cache rows the request can ever write: the prompt plus every
+        generated token EXCEPT the last (it is emitted, never written)."""
+        return self.prompt_len + self.max_new_tokens - 1
+
 
 class ActiveSlot:
     """Bookkeeping for one in-flight request bound to a pool slot."""
 
-    __slots__ = ("request", "future", "index", "pos", "last_token", "emitted", "t_admit")
+    __slots__ = (
+        "request", "future", "index", "pos", "last_token", "emitted", "t_admit",
+        "rng", "prefill_pos",
+    )
 
-    def __init__(self, request: LMRequest, future, index: int):
+    def __init__(self, request: LMRequest, future, index: int, seq: int = 0):
         self.request = request
         self.future = future
         self.index = index
@@ -65,6 +79,16 @@ class ActiveSlot:
         self.last_token: int = 0
         self.emitted: List[int] = []
         self.t_admit: Optional[float] = None
+        # per-request PRNG stream (None for greedy); the pool's admission
+        # counter seeds requests that did not pin their own seed
+        self.rng = make_rng(request.sampling, fallback_seed=seq)
+        # chunked prefill progress: prompt tokens already written to the
+        # cache.  >= prompt_len (or no chunking) means the slot is decoding.
+        self.prefill_pos: int = request.prompt_len
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prefill_pos < self.request.prompt_len
 
     def emit(self, token: int) -> bool:
         """Record one generated token; True when the request is finished."""
@@ -104,20 +128,27 @@ class SlotPool:
     def active_indices(self) -> List[int]:
         return [i for i, s in enumerate(self._slots) if s is not None]
 
+    def decoding_indices(self) -> List[int]:
+        """Active slots actually decoding this step (chunked prefill keeps a
+        slot occupied but out of the batched decode until its prompt is in)."""
+        return [i for i, s in enumerate(self._slots) if s is not None and not s.prefilling]
+
     def __getitem__(self, i: int) -> Optional[ActiveSlot]:
         return self._slots[i]
 
     def admit(self, request: LMRequest, future) -> ActiveSlot:
         """Claim a free slot for a request (caller guarantees capacity and
-        that prompt_len + max_new_tokens fits ``max_len``)."""
+        that the request's written rows fit ``max_len``)."""
         if not self._free:
             raise RuntimeError("no free slot; check free_slots() before admit")
-        need = request.prompt_len + request.max_new_tokens
+        # rows_needed, not prompt + max_new: the final emitted token is never
+        # written, so a request that exactly fills the cache must be admitted
+        need = request.rows_needed
         if need > self.max_len:
             raise ValueError(
                 f"request needs {need} cache rows > pool max_len={self.max_len}"
             )
-        slot = ActiveSlot(request, future, self._free.pop())
+        slot = ActiveSlot(request, future, self._free.pop(), seq=self.admitted_total)
         self._slots[slot.index] = slot
         self.admitted_total += 1
         return slot
@@ -133,10 +164,12 @@ class SlotPool:
     # -- batched decode inputs ----------------------------------------------
 
     def cache_lens(self) -> np.ndarray:
-        """(N,) int32 per-slot decode positions (0 for free slots — their
-        lane still computes, masked to a single valid row; output discarded)."""
+        """(N,) int32 per-slot decode positions (0 for free AND still-
+        prefilling slots — their lane still computes, masked to a single
+        valid row; output discarded and, in paged mode, the masked write
+        lands on the sentinel page)."""
         return np.asarray(
-            [0 if s is None else s.pos for s in self._slots], np.int32
+            [0 if s is None or s.prefilling else s.pos for s in self._slots], np.int32
         )
 
     def last_tokens(self) -> np.ndarray:
@@ -149,9 +182,10 @@ class SlotPool:
 
     def observe_step(self):
         """Called once per engine decode step, BEFORE that step's
-        retirements: counts the lanes that decoded a live request."""
+        retirements: counts the lanes that decoded a live request (slots
+        still chunk-prefilling occupy a lane but do not decode)."""
         self.steps += 1
-        self.active_slot_steps += self.n_slots - len(self._free)
+        self.active_slot_steps += len(self.decoding_indices())
 
     def occupancy(self) -> float:
         """Mean fraction of slots doing useful work per decode step."""

@@ -45,11 +45,14 @@ def make_prefill_step(cfg: ArchConfig):
 def make_decode_step(cfg: ArchConfig, return_hidden: bool = False):
     """One-token decode step.  ``cache_len`` may be a scalar (whole-batch
     position, the ``greedy_generate`` regime) or a (B,) vector of per-slot
-    positions (continuous batching).  With ``return_hidden`` the step also
-    yields the final hidden state of the new token — the decorrelation
-    probes' sampling target for in-flight slots."""
+    positions (continuous batching).  ``block_tables`` routes the paged
+    (block-table) attention path when the caches are page pools.  With
+    ``return_hidden`` the step also yields the final hidden state of the new
+    token — the decorrelation probes' sampling target for in-flight slots."""
 
-    def decode(params, caches, cache_len, tokens=None, embeds=None, positions=None):
+    def decode(
+        params, caches, cache_len, tokens=None, embeds=None, positions=None, block_tables=None
+    ):
         out = forward(
             params,
             cfg,
@@ -58,6 +61,7 @@ def make_decode_step(cfg: ArchConfig, return_hidden: bool = False):
             positions=positions,
             caches=caches,
             cache_len=cache_len,
+            block_tables=block_tables,
         )
         if return_hidden:
             return out.logits[:, 0], out.hidden[:, 0], out.caches
@@ -95,6 +99,36 @@ def make_prefill_at_step(cfg: ArchConfig):
     return prefill_at
 
 
+def make_chunked_prefill_step(cfg: ArchConfig):
+    """One chunk of an incremental prefill at batch 1: write the chunk's KV
+    at rows [offset, offset + C), attend causally across the already-written
+    prefix AND within the chunk, and read logits/hidden at the chunk's true
+    last token (``last``, chunk-local — only meaningful on the final chunk;
+    earlier chunks run for their cache writes).
+
+    Chunks are fixed-width C so the step compiles once; only the FINAL chunk
+    may be right-padded (its pad rows write garbage KV beyond the prompt,
+    masked by ``cache_len`` during decode and overwritten as the slot
+    advances — the same argument as padded whole-prompt prefill).  Attention
+    patterns only: recurrent mixers fold chunk padding into their state.
+    """
+
+    def prefill_chunk(params, caches, tokens, offset, last):
+        out = forward(
+            params,
+            cfg,
+            tokens=tokens,
+            caches=caches,
+            cache_len=offset,
+            chunked_prefill=True,
+        )
+        logits = jax.lax.dynamic_index_in_dim(out.logits, last, axis=1, keepdims=False)
+        hidden = jax.lax.dynamic_index_in_dim(out.hidden, last, axis=1, keepdims=False)
+        return logits, hidden, out.caches
+
+    return prefill_chunk
+
+
 # ---------------------------------------------------------------------------
 # Per-slot cache pool surgery (continuous batching)
 # ---------------------------------------------------------------------------
@@ -120,6 +154,83 @@ def reset_slot_state(pool, slot):
     slots out by ``cache_len`` anyway; resetting keeps retired KV/SSM state
     from lingering in memory dumps and makes slot reuse order-independent."""
     return jax.tree.map(lambda p: p.at[:, slot].set(jnp.zeros((), p.dtype)), pool)
+
+
+# ---------------------------------------------------------------------------
+# Paged cache pool surgery (block-table continuous batching)
+# ---------------------------------------------------------------------------
+#
+# Paged pools mix two leaf layouts per pattern position: attention holds
+# page pools (repeats, P, page, kv, hd) addressed through block tables, and
+# recurrent state stays slot-major (repeats, B, ...) like the dense pool.
+# All three helpers below take traced indices, so one jitted instance serves
+# every slot; the host-side allocator (`repro.serve.paging`) owns which
+# physical pages each table row names.
+
+
+def _is_paged(leafs) -> bool:
+    return isinstance(leafs, dict) and "k_pages" in leafs
+
+
+def insert_slot_state_paged(pool, one, slot, bt_row):
+    """Scatter a prefilled batch-1 DENSE cache tree ``one`` into the paged
+    pool: attention rows [j * page, (j + 1) * page) land in physical page
+    ``bt_row[j]`` (unassigned table entries point at the sentinel page, which
+    absorbs the template's padding rows), recurrent state is a dense
+    per-slot write.  ``bt_row``: (NB,) int32 with NB * page == the template's
+    max_len."""
+    out = {}
+    for name, leafs in pool.items():
+        if _is_paged(leafs):
+            page = leafs["k_pages"].shape[2]
+            nb = bt_row.shape[0]
+            out[name] = {}
+            for key, src in (("k_pages", "k"), ("v_pages", "v")):
+                rows = one[name][src][:, 0]  # (repeats, L, kv, hd), L == nb * page
+                rows = rows.reshape(rows.shape[0], nb, page, *rows.shape[2:])
+                out[name][key] = leafs[key].at[:, bt_row].set(rows.astype(leafs[key].dtype))
+        else:
+            out[name] = jax.tree.map(
+                lambda p, o: jax.lax.dynamic_update_slice_in_dim(
+                    p, o.astype(p.dtype), slot, axis=1
+                ),
+                leafs,
+                one[name],
+            )
+    return out
+
+
+def reset_slot_state_paged(pool, slot, bt_row):
+    """Zero a retired slot's pages (and its dense recurrent state).  Same
+    hygiene contract as ``reset_slot_state``; sentinel entries in ``bt_row``
+    get zeroed too, which is harmless (the sentinel is never read unmasked)."""
+    out = {}
+    for name, leafs in pool.items():
+        if _is_paged(leafs):
+            out[name] = {
+                key: leafs[key].at[:, bt_row].set(jnp.zeros((), leafs[key].dtype))
+                for key in ("k_pages", "v_pages")
+            }
+        else:
+            out[name] = jax.tree.map(lambda p: p.at[:, slot].set(jnp.zeros((), p.dtype)), leafs)
+    return out
+
+
+def apply_page_moves(pool, src, dst):
+    """Copy physical pages ``src[i] -> dst[i]`` across every paged leaf (the
+    device half of allocator compaction).  Identity moves (src == dst) are
+    no-ops, so the host can pad its move list to a fixed width and this jits
+    once."""
+    out = {}
+    for name, leafs in pool.items():
+        if _is_paged(leafs):
+            out[name] = {
+                key: leafs[key].at[:, dst].set(leafs[key][:, src])
+                for key in ("k_pages", "v_pages")
+            }
+        else:
+            out[name] = leafs
+    return out
 
 
 def greedy_generate(

@@ -30,7 +30,7 @@ from typing import Callable, Dict, Tuple
 
 import jax
 
-from repro.kernels.pallas_utils import LANE, next_multiple
+from repro.kernels.pallas_utils import LANE, SUBLANE, next_multiple
 from repro.tune.space import Config, Shape, vmem_bytes
 
 F32 = 4
@@ -95,6 +95,17 @@ def analytic_cost(kernel: str, shape: Shape, cfg: Config) -> Dict[str, float]:
         grid = f * (kp // tk)
         flops = 2.0 * f * kp * npad * n2pad
         hbm = F32 * f * (kp * npad + npad * n2pad * (kp / tk) + kp * n2pad)
+    elif kernel == "paged_attention":
+        b, s, h, hd = shape
+        page = cfg["page"]
+        hp = next_multiple(h, SUBLANE)
+        hdp = next_multiple(hd, LANE)
+        nb = _cdiv(s, page)
+        sp = nb * page
+        grid = b * nb
+        flops = 4.0 * b * sp * hp * hdp  # qk + pv per context token
+        # k/v pages stream once; q and the revisited output block re-read per page
+        hbm = F32 * b * (2.0 * sp * hp * hdp + 2.0 * nb * hp * hdp)
     elif kernel == "sumvec_fft_plan":
         (d,) = shape
         dp, d1, d2 = cfg["dp"], cfg["d1"], cfg["d2"]

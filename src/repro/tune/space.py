@@ -26,6 +26,7 @@ Kernel names and their shape/config conventions:
   freq_outer        (f, k, n)             tk, tn
   freq_mat          (f, k, n, n2)         tk
   sumvec_fft_plan   (d,)                  dp, d1, d2   (dp > d => padded)
+  paged_attention   (b, s, kv, hd)        page         (KV tokens per block)
 """
 
 from __future__ import annotations
@@ -56,6 +57,7 @@ KERNELS = (
     "freq_outer",
     "freq_mat",
     "sumvec_fft_plan",
+    "paged_attention",
 )
 
 
@@ -98,6 +100,16 @@ def vmem_bytes(kernel: str, shape: Shape, cfg: Config) -> int:
         # the plan delegates all blocking to cmatmul/ctwiddle; its own VMEM
         # footprint is whatever those choose.
         return 0
+    if kernel == "paged_attention":
+        page = cfg["page"]
+        kvp = next_multiple(shape[2], SUBLANE)
+        hdp = next_multiple(shape[3], LANE)
+        # q + out blocks are (kv, n_rep, hd); n_rep is not part of the cache
+        # key, so charge one sublane tile of query heads per kv head.  One k
+        # + one v page per grid step (all double-buffered), plus the
+        # online-softmax scratch (acc, m, l).
+        qo = SUBLANE * kvp * hdp
+        return 2 * (2 * qo + 2 * page * kvp * hdp) * F32 + (qo + 2 * SUBLANE * kvp * LANE) * F32
     raise KeyError(kernel)
 
 
@@ -118,6 +130,7 @@ def is_legal(kernel: str, shape: Shape, cfg: Config) -> bool:
         "ctwiddle": (),
         "freq_outer": ("tn",),
         "freq_mat": (),
+        "paged_attention": (),
     }[kernel]
     sub_keys = {
         "xcorr_offdiag": ("tile_n",),
@@ -126,6 +139,7 @@ def is_legal(kernel: str, shape: Shape, cfg: Config) -> bool:
         "ctwiddle": ("tn",),
         "freq_outer": ("tk",),
         "freq_mat": ("tk",),
+        "paged_attention": ("page",),
     }[kernel]
     for k in lane_keys:
         if cfg[k] <= 0 or cfg[k] % LANE:
@@ -220,6 +234,10 @@ def candidates(kernel: str, shape: Shape) -> List[Config]:
         for d1, d2 in _divisor_factorizations(d):
             out.append({"dp": d, "d1": d1, "d2": d2})
         out.extend(padded_plan_candidates(d))
+    elif kernel == "paged_attention":
+        b, s, kv, hd = shape
+        for page in _tile_options(s, SUBLANE, _SUBLANE_TILES):
+            out.append({"page": page})
     else:
         raise KeyError(kernel)
     default = default_config(kernel, shape)
@@ -260,6 +278,10 @@ def default_config(kernel: str, shape: Shape) -> Config:
         (d,) = shape
         d1, d2 = balanced_factors(d)
         return {"dp": d, "d1": d1, "d2": d2}
+    if kernel == "paged_attention":
+        b, s, kv, hd = shape
+        # vLLM's classic 16-token block, clamped to short contexts
+        return {"page": min(16, next_multiple(s, SUBLANE))}
     raise KeyError(kernel)
 
 

@@ -113,6 +113,18 @@ def _build(kernel: str, shape: Tuple[int, ...], cfg: Config) -> Tuple[Callable, 
         f, k, n, n2 = shape
         fn = lambda a, m_: _freq_mat_raw(a, m_, tk=cfg["tk"])
         return fn, _ones((f, k, n), (f, n, n2))
+    if kernel == "paged_attention":
+        from repro.kernels.paged_attention.ops import paged_decode_attention_raw
+
+        b, s, h, hd = shape
+        page = cfg["page"]
+        nb = -(-s // page)
+        bt = jnp.arange(b * nb, dtype=jnp.int32).reshape(b, nb)
+        lens = jnp.full((b,), s, jnp.int32)
+        fn = lambda q, kp, vp: paged_decode_attention_raw(
+            q, kp, vp, bt, lens, scale=1.0 / max(hd, 1) ** 0.5
+        )
+        return fn, _ones((b, h, hd), (b * nb, page, h, hd), (b * nb, page, h, hd))
     if kernel == "sumvec_fft_plan":
         from repro.kernels.sumvec_fft import ops as fops
 

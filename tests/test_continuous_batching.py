@@ -194,7 +194,29 @@ class TestAdmissionEdgeCases:
     def test_cache_overflow_rejected(self, gemma):
         svc = self._service(gemma)
         with pytest.raises(ValueError, match="slot cache"):
-            svc.submit(np.zeros(16, np.int32), 20)  # 16 + 20 > 32
+            svc.submit(np.zeros(16, np.int32), 20)  # 16 + 20 - 1 > 32
+
+    def test_exact_cache_fill_admitted_and_completes(self, gemma):
+        """Regression: a request whose written rows exactly fill the cache
+        used to be rejected at submit time.  The final generated token is
+        emitted but never written, so prompt_len + max_new_tokens - 1 rows is
+        the true footprint — both the == max_len and the one-past boundary
+        must admit and finish against the whole-request oracle."""
+        cfg, params = gemma
+        eng = ContinuousLMEngine(cfg, params, n_slots=1, max_len=32, max_prompt_len=16)
+        svc = LMService(eng)
+        svc.warmup()
+        (tokens, _), = _prompts(cfg, [(16, 1)])
+        for max_new in (16, 17):  # 16 + 17 - 1 == 32 exactly fills the rows
+            fut = svc.submit(tokens, max_new)
+            svc.drain()
+            want = np.asarray(
+                greedy_generate(params, cfg, jnp.asarray(tokens[None]), max_new, max_len=32)
+            )[0]
+            np.testing.assert_array_equal(fut.result(timeout=5), want)
+        with pytest.raises(ValueError, match="slot cache"):
+            svc.submit(tokens, 18)  # one row too many
+        assert eng.pool.free_slots() == 1
 
     def test_padded_bucket_ladder_must_fit_cache(self, gemma):
         """Regression: max_prompt_len=19 rounds UP to a 24-row prompt bucket

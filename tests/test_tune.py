@@ -28,6 +28,7 @@ SHAPES = {
     "freq_outer": (9, 48, 24),
     "freq_mat": (9, 48, 24, 24),
     "sumvec_fft_plan": (101,),
+    "paged_attention": (4, 48, 2, 16),
 }
 
 
