@@ -82,6 +82,7 @@ def run():
 
     lm_report = _run_lm_continuous()
     paged_report = _run_paged()
+    obs_report = _run_obs_overhead()
 
     out = {
         "config": {
@@ -101,6 +102,7 @@ def run():
         "gate": report["gate"],
         "lm": lm_report,
         "paged": paged_report,
+        "obs": obs_report,
     }
     with open(os.path.join(os.getcwd(), "BENCH_serve.json"), "w") as f:
         json.dump(out, f, indent=2, sort_keys=True, default=float)
@@ -145,6 +147,17 @@ def run():
         f"ok={pg['paged_peak_lt_dense']};bytes_ratio={pg['peak_cache_bytes_ratio']:.3f};"
         f"token_mismatches={pg['token_mismatches']:.0f};"
         f"tok_per_s_ratio={pg['tok_per_s_ratio']:.2f}",
+    ))
+    for name in ("off", "on"):
+        r = obs_report[name]
+        rows.append(fmt_row(
+            f"serve/obs_{name}", r["p50_ms"] * 1e3,
+            f"tok_per_s={r['tok_per_s']:.0f}",
+        ))
+    og = obs_report["gate"]
+    rows.append(fmt_row(
+        "serve/gate_obs_overhead", 0.0,
+        f"ok={og['overhead_ok']};tok_per_s_ratio={og['tok_per_s_ratio']:.3f}",
     ))
     return rows
 
@@ -205,6 +218,45 @@ def _run_paged():
         page_size=PAGED["page_size"],
         prefill_chunk=PAGED["prefill_chunk"],
     )
+
+
+def _run_obs_overhead():
+    """Telemetry on vs off on the same continuous-batching workload (the
+    acceptance gate: the always-on tracer/recorder/registry path must keep
+    >= 95% of the telemetry-off tok/s — observability that taxes the decode
+    loop does not ship)."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.obs import Obs
+    from repro.serve import ContinuousLMEngine, LMService
+    from repro.serve.loadgen import LMLoadConfig, run_continuous
+
+    cfg = get_config(LM["arch"]).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    load = LMLoadConfig(n_requests=LM["n_requests"])
+
+    def measure(obs):
+        engine = ContinuousLMEngine(
+            cfg, params, n_slots=LM["slots"],
+            max_len=max(load.max_request_len + 8, 32),
+            max_prompt_len=max(load.prompt_lens),
+        )
+        svc = LMService(engine, obs=obs)
+        best = None
+        for _ in range(2):  # first pass pays compile; keep the best of two
+            summary, _ = run_continuous(svc, load)
+            if best is None or summary["tok_per_s"] > best["tok_per_s"]:
+                best = summary
+        return best
+
+    off = measure(Obs.disabled())
+    on = measure(Obs())
+    ratio = on["tok_per_s"] / max(off["tok_per_s"], 1e-9)
+    return {
+        "on": on,
+        "off": off,
+        "gate": {"tok_per_s_ratio": ratio, "overhead_ok": ratio >= 0.95},
+    }
 
 
 if __name__ == "__main__":

@@ -64,6 +64,8 @@ HARD_GATES = {
          "paged KV cache changes no request's greedy tokens"),
         ("paged.gate.paged_peak_lt_dense", lambda v: bool(v),
          "paged peak cache bytes < dense pool at the skewed length mix"),
+        ("obs.gate.overhead_ok", lambda v: bool(v),
+         "always-on telemetry keeps >= 95% of telemetry-off tok/s"),
     ],
     "tune": [],  # per-kernel gates generated below
 }

@@ -98,7 +98,11 @@ class HeartbeatMonitor:
         return self._clock() - self._last[name]
 
     def metrics(self, prefix: str = "heartbeat_") -> Dict[str, float]:
-        """Flat gauge dict for scraping alongside the serve metrics."""
+        """Flat gauge dict for scraping alongside the serve metrics.  Per-name
+        age gauges use exposition-safe names (``heartbeat_age_s_serve_dispatch``)
+        so alert rules can target them directly."""
+        from repro.obs.registry import sanitize_name
+
         overdue = self.stale()
         out = {
             f"{prefix}components": float(len(self._last)),
@@ -106,7 +110,7 @@ class HeartbeatMonitor:
             f"{prefix}missed_events": float(self.missed_events),
         }
         for name in self._last:
-            out[f"{prefix}age_s:{name}"] = self.age(name)
+            out[sanitize_name(f"{prefix}age_s_{name}")] = self.age(name)
         return out
 
 

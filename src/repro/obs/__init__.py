@@ -1,0 +1,70 @@
+"""repro.obs — unified telemetry for the train + serve stack.
+
+One subsystem, five layers (one module each):
+
+  * ``registry``  — typed Counter/Gauge/Histogram primitives with labels, a
+                    cardinality guard, Prometheus text exposition, and a
+                    process-global default registry;
+  * ``tracing``   — per-request lifecycle spans (submit -> queue -> admit ->
+                    prefill -> decode ticks -> retire) + pool-level
+                    executable spans, exportable as Chrome ``trace_event``
+                    JSON (``reconstruct_request`` rebuilds one request's
+                    story from a dump);
+  * ``recorder``  — the scheduler flight recorder: a bounded ring buffer of
+                    per-tick events (admit/defer/retire/page moves/
+                    backpressure), dumpable on demand or on alert;
+  * ``alerts``    — config-driven threshold rules over the scrape surface,
+                    edge-triggered (fire once per crossing, clear on
+                    recovery), wired to the decorr probe gauges, heartbeat
+                    ages, TTFT and page-pool occupancy;
+  * ``profiling`` — opt-in ``jax.profiler`` capture behind start/stop;
+  * ``http``      — the stdlib scrape endpoint (``/metrics`` evaluates the
+                    alert rules on every scrape).
+
+``Obs`` bundles all of it; services accept ``obs=`` and default to a fully
+enabled bundle (``Obs.disabled()`` is the telemetry-off bench baseline).
+
+    from repro.obs import Obs
+    from repro.obs.alerts import AlertManager, default_serve_rules
+
+    obs = Obs(alerts=AlertManager(default_serve_rules()))
+    svc = LMService(engine, obs=obs)
+    server = obs.start_server(port=9100, metrics_fn=svc.metrics)
+    ...
+    obs.tracer.write("trace.json")          # chrome://tracing
+    obs.recorder.dump_json("flightrec.json")
+"""
+
+from repro.obs.alerts import AlertManager, AlertRule, default_serve_rules
+from repro.obs.context import Obs
+from repro.obs.http import MetricsServer
+from repro.obs.profiling import Profiler
+from repro.obs.recorder import FlightRecorder
+from repro.obs.registry import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_registry,
+    sanitize_name,
+)
+from repro.obs.tracing import RequestTrace, Tracer, reconstruct_request
+
+__all__ = [
+    "AlertManager",
+    "AlertRule",
+    "Counter",
+    "FlightRecorder",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "MetricsServer",
+    "Obs",
+    "Profiler",
+    "RequestTrace",
+    "Tracer",
+    "default_registry",
+    "default_serve_rules",
+    "reconstruct_request",
+    "sanitize_name",
+]

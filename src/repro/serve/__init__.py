@@ -26,7 +26,11 @@ Layers (one module each):
   * ``service``  — ``EmbeddingService`` / ``LMService``: dispatch loops
                    wiring batcher, engine, probe, latency stats and the
                    ``repro.ft`` heartbeat into one scrapeable object (the LM
-                   loop ticks per decode step: admit, decode, retire);
+                   loop ticks per decode step: admit, decode, retire); both
+                   take an ``obs=`` bundle (``repro.obs``) for request
+                   tracing, flight recording, alerting and the Prometheus
+                   exposition — ``collect_metrics`` keeps the legacy
+                   ``metrics()`` dict and the registry in lockstep;
   * ``loadgen``  — deterministic load generation + naive-vs-micro-batched
                    policy comparison (the bench/CLI core);
   * ``common``   — shared token-model helpers (prompt construction,
@@ -55,7 +59,7 @@ from repro.serve.loadgen import (
 from repro.serve.paging import PageAllocator, PagedKVManager
 from repro.serve.probes import DecorrProbe
 from repro.serve.sampling import SamplingParams
-from repro.serve.service import EmbeddingService, LMService
+from repro.serve.service import EmbeddingService, LMService, collect_metrics
 from repro.serve.slots import LMRequest, SlotPool
 
 __all__ = [
@@ -79,6 +83,7 @@ __all__ = [
     "bucket_for",
     "bucket_shapes",
     "bucket_sizes",
+    "collect_metrics",
     "compare_lm_policies",
     "compare_paged_dense",
     "compare_policies",

@@ -32,6 +32,51 @@ import sys
 from repro.serve.buckets import BucketPolicy, bucket_sizes
 
 
+def _build_obs(args):
+    """The CLI's telemetry bundle: default serve alert rules unless
+    ``--alerts`` points at a JSON rule list (file path or inline)."""
+    from repro.obs import AlertManager, Obs, default_serve_rules
+
+    alerts = (
+        AlertManager.from_config(args.alerts)
+        if args.alerts
+        else AlertManager(default_serve_rules())
+    )
+    return Obs(alerts=alerts)
+
+
+def _finish_obs(args, obs, report_metrics) -> bool:
+    """Post-run telemetry outputs: self-scrape the HTTP endpoint
+    (``--metrics-port``; asserts every legacy ``metrics()`` key survived into
+    the exposition) and dump the Chrome trace (``--trace-out``)."""
+    from repro.obs.registry import sanitize_name
+
+    ok = True
+    if args.metrics_port is not None:
+        import urllib.request
+
+        server = obs.start_server(port=args.metrics_port)
+        text = urllib.request.urlopen(f"{server.url}/metrics", timeout=10).read().decode()
+        exposed = {
+            line.split("{")[0].split(" ")[0]
+            for line in text.splitlines()
+            if line and not line.startswith("#")
+        }
+        missing = [k for k in report_metrics if sanitize_name(k) not in exposed]
+        print(
+            f"[obs] scrape {server.url}/metrics: {len(text.splitlines())} lines, "
+            f"{len(exposed)} series, active_alerts={obs.alerts.active()}"
+        )
+        if missing:
+            print(f"[obs] MISSING from exposition: {missing[:8]}")
+            ok = False
+        server.stop()
+    if args.trace_out:
+        obs.tracer.write(args.trace_out)
+        print(f"[obs] trace: {len(obs.tracer)} events -> {args.trace_out}")
+    return ok
+
+
 def _build_engine(args):
     import jax
 
@@ -93,7 +138,12 @@ def _run_embedding(args) -> int:
         f"[serve] d={args.d} requests={load.n_requests} "
         f"buckets={list(bucket_sizes(policy))} max_wait={policy.max_wait_ms}ms"
     )
-    report = compare_policies(engine_fn, load, policy, probe_fn=probe_fn)
+    obs = _build_obs(args)
+    if args.profile_dir:
+        obs.profiler.start(args.profile_dir)
+    report = compare_policies(engine_fn, load, policy, probe_fn=probe_fn, obs=obs)
+    if args.profile_dir and obs.profiler.stop():
+        print(f"[obs] profiler trace -> {args.profile_dir}")
     for name in ("naive", "microbatch"):
         r = report[name]
         print(
@@ -111,7 +161,9 @@ def _run_embedding(args) -> int:
         print(f"[serve] probe metrics: {probes}")
         print(f"[serve] heartbeat stale={m['heartbeat_stale']:.0f} "
               f"missed={m['heartbeat_missed_events']:.0f}")
-    return 0 if g["microbatch_beats_naive"] or not args.gate else 1
+    obs_ok = _finish_obs(args, obs, report["service_metrics"])
+    ok = g["microbatch_beats_naive"] and obs_ok
+    return 0 if ok or not args.gate else 1
 
 
 def _run_lm(args) -> int:
@@ -160,6 +212,9 @@ def _run_lm_continuous(args, cfg, params) -> int:
         engine_kw = dict(paged=True, page_size=args.block_size)
     load = LMLoadConfig(n_requests=args.requests, seed=args.seed)
     probe_cfg = DecorrConfig(style=args.probe_style, reg="sum", q=2, block_size=args.probe_block)
+    obs = _build_obs(args)
+    if args.profile_dir:
+        obs.profiler.start(args.profile_dir)
     report = compare_lm_policies(
         cfg,
         params,
@@ -168,7 +223,10 @@ def _run_lm_continuous(args, cfg, params) -> int:
         probe_fn=lambda: DecorrProbe(probe_cfg),
         record_probe_rows=True,
         engine_kw=engine_kw,
+        obs=obs,
     )
+    if args.profile_dir and obs.profiler.stop():
+        print(f"[obs] profiler trace -> {args.profile_dir}")
     for name in ("whole_request", "continuous"):
         r = report[name]
         print(
@@ -194,6 +252,7 @@ def _run_lm_continuous(args, cfg, params) -> int:
         _demo_sampling(args, cfg, params)
     if args.json:
         print(json.dumps(report, indent=2, sort_keys=True, default=float))
+    obs_ok = _finish_obs(args, obs, report["service_metrics"])
     # fail-closed like benchmarks/compare.py: a probe that never fired a
     # full window means the oracle check did NOT run — that fails the gate
     probe_err = g.get("probe_oracle_rel_err")
@@ -203,6 +262,7 @@ def _run_lm_continuous(args, cfg, params) -> int:
         and probe_err is not None
         and probe_err < 1e-3
         and paged_ok
+        and obs_ok
     )
     return 0 if ok or not args.gate else 1
 
@@ -310,6 +370,18 @@ def main(argv=None) -> int:
                         "(0 = greedy only)")
     p.add_argument("--top-k", type=int, default=None,
                    help="restrict sampled decoding to the k highest logits")
+    # telemetry (repro.obs)
+    p.add_argument("--metrics-port", type=int, default=None,
+                   help="serve /metrics over HTTP after the run and self-scrape "
+                        "it (0 = ephemeral port); the gate fails if any legacy "
+                        "metrics() key is missing from the exposition")
+    p.add_argument("--trace-out", default=None,
+                   help="write the Chrome trace_event JSON of the run here")
+    p.add_argument("--profile-dir", default=None,
+                   help="capture a jax.profiler trace of the run into this dir")
+    p.add_argument("--alerts", default=None,
+                   help="alert rules as a JSON file path or inline JSON list "
+                        "(default: the built-in serve rules)")
     args = p.parse_args(argv)
 
     if args.smoke:

@@ -281,6 +281,10 @@ class ContinuousLMEngine:
         self.compact_on_retire = compact_on_retire
         # right-padded prompt buckets only where causality hides the padding
         self.pad_prompts = all(spec.mixer == "attn" for spec in arch_cfg.pattern)
+        # optional flight recorder (repro.obs.FlightRecorder); the service
+        # attaches its own so page-table churn lands in the same ring buffer
+        # as the scheduler's admit/retire events
+        self.recorder = None
 
         self.paged = bool(paged)
         self.pager = None
@@ -490,9 +494,16 @@ class ContinuousLMEngine:
         if self.needs_chunking(slot.request.prompt_len):
             slot.prefill_pos = 0
 
+    def _record(self, kind: str, **fields):
+        if self.recorder is not None:
+            self.recorder.record(kind, **fields)
+
     def _scatter_insert(self, slot, one):
         if self.paged:
-            self.pager.ensure_rows(slot.index, slot.request.prompt_len)
+            added = self.pager.ensure_rows(slot.index, slot.request.prompt_len)
+            if added:
+                self._record("page_alloc", slot=slot.index, pages=len(added),
+                             in_use=self.pager.alloc.in_use)
             bt_row = jnp.asarray(self.pager.table_row(slot.index))
             self.caches = self._insert(self.caches, one, np.int32(slot.index), bt_row)
         else:
@@ -573,7 +584,10 @@ class ContinuousLMEngine:
             for i in self.pool.decoding_indices():
                 # lazy page growth: bind the write target's page (cannot
                 # fail — admission reserved the worst case)
-                self.pager.ensure_rows(i, self.pool[i].pos + 1)
+                added = self.pager.ensure_rows(i, self.pool[i].pos + 1)
+                if added:
+                    self._record("page_alloc", slot=i, pages=len(added),
+                                 in_use=self.pager.alloc.in_use)
             bt = jnp.asarray(self.pager.block_tables())
             out, hidden, self.caches = self._decode(self.params, self.caches, lens, toks, bt)
         else:
@@ -589,7 +603,11 @@ class ContinuousLMEngine:
         if self._chunk_live is not None and self._chunk_live[0] == index:
             self._chunk_live = None
         if self.paged:
+            before = self.pager.alloc.in_use
             self.pager.release(index)
+            self._record("page_free", slot=index, abort=True,
+                         pages=before - self.pager.alloc.in_use,
+                         in_use=self.pager.alloc.in_use)
 
     def release(self, index: int):
         """Retire a slot: zero its cache rows (hygiene; decode masks them),
@@ -602,10 +620,15 @@ class ContinuousLMEngine:
             if self.reset_on_retire:
                 bt_row = jnp.asarray(self.pager.table_row(index))
                 self.caches = self._reset(self.caches, np.int32(index), bt_row)
+            before = self.pager.alloc.in_use
             self.pager.release(index)
+            self._record("page_free", slot=index,
+                         pages=before - self.pager.alloc.in_use,
+                         in_use=self.pager.alloc.in_use)
             if self.compact_on_retire:
                 src, dst = self.pager.plan_compaction()
                 if src.size:
+                    self._record("page_compact", moves=int((src != dst).sum()))
                     self.caches = self._moves(
                         self.caches, jnp.asarray(src), jnp.asarray(dst)
                     )

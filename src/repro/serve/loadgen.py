@@ -66,6 +66,29 @@ def _summary(latencies_s: List[float], wall_s: float) -> Dict[str, float]:
     }
 
 
+def _trace_latencies(futures) -> List[float]:
+    """Per-request latency read from the request's ``RequestTrace`` marks —
+    the one timing source the service, the tracer export and this load
+    generator all share (falls back to the future's own stamp only for
+    futures that never went through a service ``submit``)."""
+    out = []
+    for f in futures:
+        tr = getattr(f, "trace", None)
+        lat = tr.latency_s if tr is not None else f.latency_s
+        if lat is not None:
+            out.append(lat)
+    return out
+
+
+def _trace_ttfts(futures) -> List[float]:
+    out = []
+    for f in futures:
+        tr = getattr(f, "trace", None)
+        if tr is not None and tr.ttft_s is not None:
+            out.append(tr.ttft_s)
+    return out
+
+
 def run_naive(engine: ServeEngine, load: LoadConfig, probe: Optional[DecorrProbe] = None) -> Dict[str, float]:
     """Per-request serving: every request is its own (bucket-1) dispatch."""
     xs, gaps = request_stream(load)
@@ -101,7 +124,7 @@ def run_microbatched(
     results = [f.result(timeout=timeout_s) for f in futures]
     wall = time.perf_counter() - t_run
     assert all(r.shape == (service.engine.d,) for r in results)
-    out = _summary([f.latency_s for f in futures], wall)
+    out = _summary(_trace_latencies(futures), wall)
     out["mean_batch"] = service.stats.served / max(service.stats.batches, 1)
     out["batches"] = float(service.stats.batches)
     return out
@@ -112,14 +135,16 @@ def compare_policies(
     load: LoadConfig,
     policy: BucketPolicy,
     probe_fn=None,
+    obs=None,
 ) -> Dict[str, Dict[str, float]]:
     """Run naive then micro-batched on FRESH engines (cold, comparable compile
     caches).  ``engine_fn() -> ServeEngine``; ``probe_fn() -> DecorrProbe``
-    (optional; the micro-batched run feeds it every dispatched batch)."""
+    (optional; the micro-batched run feeds it every dispatched batch);
+    ``obs`` an ``repro.obs.Obs`` bundle for the micro-batched service."""
     naive = run_naive(engine_fn(), load)
 
     probe = probe_fn() if probe_fn is not None else None
-    service = EmbeddingService(engine_fn(), policy=policy, probe=probe).start()
+    service = EmbeddingService(engine_fn(), policy=policy, probe=probe, obs=obs).start()
     try:
         micro = run_microbatched(service, load)
         metrics = service.metrics()
@@ -217,7 +242,12 @@ def run_continuous(service, load: LMLoadConfig, timeout_s: float = 300.0):
     outs = [f.result(timeout=timeout_s) for f in futures]
     wall = time.perf_counter() - t_run
     n_tok = sum(len(o) for o in outs)
-    return _lm_summary([f.latency_s for f in futures], n_tok, wall), outs
+    summary = _lm_summary(_trace_latencies(futures), n_tok, wall)
+    ttfts = _trace_ttfts(futures)
+    if ttfts:
+        summary["ttft_p50_ms"] = float(np.percentile(ttfts, 50) * 1e3)
+        summary["ttft_p99_ms"] = float(np.percentile(ttfts, 99) * 1e3)
+    return summary, outs
 
 
 def compare_lm_policies(
@@ -230,6 +260,7 @@ def compare_lm_policies(
     probe_fn=None,
     record_probe_rows: bool = False,
     engine_kw: Optional[Dict] = None,
+    obs=None,
 ) -> Dict[str, Dict[str, float]]:
     """Whole-request generate vs continuous batching on one mixed-length
     workload.  Also cross-checks correctness: both policies must emit
@@ -253,7 +284,7 @@ def compare_lm_policies(
     whole, whole_outs = run_whole_request(whole_engine, params, load, max_len)
 
     probe = probe_fn() if probe_fn is not None else None
-    service = LMService(engine, probe=probe, record_probe_rows=record_probe_rows)
+    service = LMService(engine, probe=probe, record_probe_rows=record_probe_rows, obs=obs)
     cont, cont_outs = run_continuous(service, load)
     metrics = service.metrics()
 

@@ -137,6 +137,11 @@ class PagedKVManager:
 
     def metrics(self, prefix: str = "paged_") -> Dict[str, float]:
         out = {f"{prefix}{k}": v for k, v in self.alloc.metrics(prefix="pages_").items()}
+        # derived occupancy ratio so threshold alert rules (page_pool_pressure)
+        # can target one gauge instead of dividing two
+        out[f"{prefix}pages_utilization"] = (
+            self.alloc.in_use / self.alloc.usable_pages if self.alloc.usable_pages else 0.0
+        )
         out[f"{prefix}page_tokens"] = float(self.page)
         out[f"{prefix}peak_cache_bytes"] = float(self.peak_cache_bytes())
         out[f"{prefix}pool_cache_bytes"] = float(self.pool_cache_bytes())

@@ -24,12 +24,13 @@ from __future__ import annotations
 import collections
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Mapping, Optional
 
 import numpy as np
 
 from repro.ft.watchdog import HeartbeatMonitor
-from repro.serve.batcher import MicroBatcher, Request, ServeFuture
+from repro.obs import Obs
+from repro.serve.batcher import Backpressure, MicroBatcher, Request, ServeFuture
 from repro.serve.buckets import BucketPolicy
 from repro.serve.engine import ContinuousLMEngine, ServeEngine
 from repro.serve.probes import DecorrProbe
@@ -38,6 +39,48 @@ from repro.serve.slots import LMRequest
 
 HEARTBEAT_NAME = "serve.dispatch"
 HEARTBEAT_LM = "serve.lm_decode"
+
+
+def collect_metrics(*parts, registry=None) -> Dict[str, float]:
+    """Merge metric sources (flat dicts or objects with ``.metrics()``) into
+    one scrape dict, optionally mirroring every key into a registry as
+    gauges.  Both services assemble their scrape surface through this one
+    helper, so the legacy flat dict and the registry view cannot drift."""
+    out: Dict[str, float] = {}
+    for part in parts:
+        if part is None:
+            continue
+        out.update(part if isinstance(part, Mapping) else part.metrics())
+    if registry is not None:
+        registry.publish(out)
+    return out
+
+
+def _trace_of(future) -> Optional["object"]:
+    return getattr(future, "trace", None)
+
+
+class _ObsAPI:
+    """Telemetry surface shared by both services (``self.obs`` is an
+    ``repro.obs.Obs`` bundle set in the subclass ``__init__``)."""
+
+    obs: Obs
+
+    def start_metrics_server(self, port: int = 0, host: str = "127.0.0.1"):
+        """Expose this service's scrape surface over HTTP (``/metrics``,
+        ``/alerts``, ``/healthz``); returns the started server."""
+        return self.obs.start_server(port=port, metrics_fn=self.metrics, host=host)
+
+    def scrape(self) -> str:
+        """One Prometheus exposition of this service (also evaluates the
+        alert rules — scrape-path alerting)."""
+        return self.obs.scrape(self.metrics)
+
+    def start_profiling(self, trace_dir: Optional[str] = None) -> bool:
+        return self.obs.profiler.start(trace_dir)
+
+    def stop_profiling(self) -> Optional[str]:
+        return self.obs.profiler.stop()
 
 
 class LatencyStats:
@@ -77,7 +120,7 @@ class LatencyStats:
         }
 
 
-class EmbeddingService:
+class EmbeddingService(_ObsAPI):
     """Batched embedding serving with online representation-health probes."""
 
     def __init__(
@@ -88,8 +131,13 @@ class EmbeddingService:
         probe: Optional[DecorrProbe] = None,
         heartbeat: Optional[HeartbeatMonitor] = None,
         heartbeat_timeout_s: float = 10.0,
+        obs: Optional[Obs] = None,
     ):
         self.engine = engine
+        self.obs = obs or Obs()
+        self._h_encode = self.obs.registry.histogram(
+            "serve_encode_seconds", "embedding batch encode wall time"
+        )
         self.policy = (policy or engine.policy).validate()
         self.batcher = MicroBatcher(self.policy)
         self.probe = probe
@@ -116,13 +164,27 @@ class EmbeddingService:
             raise ValueError(f"expected a (d,) row or (n, d) row-batch, got shape {x.shape}")
         if x.size == 0:
             raise ValueError(f"empty request (shape {x.shape}); nothing to embed")
-        return self.batcher.submit(x, **kw)
+        tr = self.obs.tracer.start_request("embed", rows=int(x.shape[0] if x.ndim == 2 else 1))
+        try:
+            fut = self.batcher.submit(x, **kw)
+        except Backpressure:
+            self.obs.recorder.record("backpressure", traffic="embed",
+                                     queue_depth=self.batcher.depth())
+            raise
+        fut.trace = tr
+        return fut
 
     # -- dispatch loop ------------------------------------------------------
 
     def _dispatch(self, requests: List[Request]):
+        depth = self.batcher.depth()
+        for r in requests:
+            tr = _trace_of(r.future)
+            if tr is not None:
+                tr.mark_admit(batch=len(requests), queue_depth=depth)
         rows = [r.x if r.x.ndim == 2 else r.x[None] for r in requests]
         x = np.concatenate(rows, axis=0)
+        t0 = time.perf_counter()
         try:
             z = self.engine.encode(x)
             z.block_until_ready()
@@ -130,21 +192,37 @@ class EmbeddingService:
             self._errors += 1
             for r in requests:
                 r.future.set_exception(e)
+                tr = _trace_of(r.future)
+                if tr is not None:
+                    tr.mark_done("error")
+            self.obs.recorder.record("error", traffic="embed", batch=len(requests))
             return
+        t1 = time.perf_counter()
+        if self.obs.enabled:
+            self._h_encode.observe(t1 - t0)
+            self.obs.tracer.add_span("encode", t0, t1, cat="exec",
+                                     rows=int(x.shape[0]))
+        self.obs.recorder.record("dispatch", requests=len(requests),
+                                 rows=int(x.shape[0]), queue_depth=depth)
         # one device->host transfer, then numpy fan-out: per-request device
         # slices would each compile their own XLA gather and dispatch 1/row.
         z_host = np.asarray(z)
         if self.probe is not None:
             self.probe.observe(z_host)
         off = 0
+        latencies = []
         for r in requests:
             n = r.x.shape[0] if r.x.ndim == 2 else 1
             out = z_host[off] if r.x.ndim == 1 else z_host[off : off + n]
             r.future.set_result(out)
             off += n
-        self.stats.observe_batch(
-            [r.future.latency_s for r in requests if r.future.latency_s is not None]
-        )
+            tr = _trace_of(r.future)
+            if tr is not None:
+                tr.mark_done()
+                latencies.append(tr.latency_s)
+            elif r.future.latency_s is not None:
+                latencies.append(r.future.latency_s)
+        self.stats.observe_batch(latencies)
         self.heartbeat.beat(HEARTBEAT_NAME)
 
     def run_pending(self, timeout: float = 0.0) -> int:
@@ -195,16 +273,18 @@ class EmbeddingService:
     # -- scrape surface -----------------------------------------------------
 
     def metrics(self) -> Dict[str, float]:
-        out = {
-            "queue_depth": float(self.batcher.depth()),
-            "dispatch_errors": float(self._errors),
-            "compiled_buckets": float(len(self.engine.compiled_buckets())),
-        }
-        out.update(self.stats.metrics())
-        out.update(self.heartbeat.metrics())
-        if self.probe is not None:
-            out.update(self.probe.metrics())
-        return out
+        return collect_metrics(
+            {
+                "queue_depth": float(self.batcher.depth()),
+                "dispatch_errors": float(self._errors),
+                "compiled_buckets": float(len(self.engine.compiled_buckets())),
+            },
+            self.stats,
+            self.heartbeat,
+            self.probe,
+            self.obs,
+            registry=self.obs.registry,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -212,7 +292,7 @@ class EmbeddingService:
 # ---------------------------------------------------------------------------
 
 
-class LMService:
+class LMService(_ObsAPI):
     """Continuous-batching LM serving over a ``ContinuousLMEngine``.
 
     Shares the embedding path's machinery end to end: the bounded
@@ -239,8 +319,22 @@ class LMService:
         heartbeat: Optional[HeartbeatMonitor] = None,
         heartbeat_timeout_s: float = 10.0,
         record_probe_rows: bool = False,
+        obs: Optional[Obs] = None,
     ):
         self.engine = engine
+        self.obs = obs or Obs()
+        # the engine narrates page-table activity into the same ring buffer
+        engine.recorder = self.obs.recorder
+        reg = self.obs.registry
+        self._h_prefill = reg.histogram(
+            "serve_prefill_seconds", "whole-prompt insert wall time"
+        )
+        self._h_chunk = reg.histogram(
+            "serve_chunk_prefill_seconds", "one chunked-prefill step wall time"
+        )
+        self._h_decode = reg.histogram(
+            "serve_decode_step_seconds", "one batched decode step wall time"
+        )
         n_slots = engine.pool.n_slots
         self.batcher = MicroBatcher(
             BucketPolicy(max_batch=n_slots, max_wait_ms=0.0, max_queue=max_queue)
@@ -307,7 +401,17 @@ class LMService:
         req = LMRequest(
             tokens=tokens, max_new_tokens=int(max_new_tokens), eos_id=eos_id, sampling=sampling
         )
-        return self.batcher.submit(req, block=block, timeout=timeout)
+        tr = self.obs.tracer.start_request(
+            "lm", prompt_len=int(tokens.shape[0]), max_new_tokens=int(max_new_tokens)
+        )
+        try:
+            fut = self.batcher.submit(req, block=block, timeout=timeout)
+        except Backpressure:
+            self.obs.recorder.record("backpressure", traffic="lm",
+                                     queue_depth=self.batcher.depth())
+            raise
+        fut.trace = tr
+        return fut
 
     # -- decode-step tick ---------------------------------------------------
 
@@ -321,9 +425,28 @@ class LMService:
 
     def _finish(self, slot):
         slot.future.set_result(np.asarray(slot.emitted, np.int32))
+        tr = _trace_of(slot.future)
+        if tr is not None:
+            tr.mark_done()
         self.tokens_total += len(slot.emitted)
-        self.stats.observe_batch([slot.future.latency_s])
+        lat = tr.latency_s if tr is not None else slot.future.latency_s
+        self.stats.observe_batch([lat])
+        eos = slot.request.eos_id is not None and slot.emitted \
+            and slot.emitted[-1] == slot.request.eos_id
+        self.obs.recorder.record("retire", slot=slot.index,
+                                 tokens=len(slot.emitted),
+                                 reason="eos" if eos else "budget")
         self.engine.release(slot.index)
+
+    def _fail(self, slot_or_req_future, exc):
+        """Common error tail: reject the future, close its trace, log the
+        anomaly to the flight recorder."""
+        self._errors += 1
+        slot_or_req_future.set_exception(exc)
+        tr = _trace_of(slot_or_req_future)
+        if tr is not None:
+            tr.mark_done("error")
+        self.obs.recorder.record("error", traffic="lm", error=type(exc).__name__)
 
     def _pick_token(self, slot, out) -> int:
         """out: a token id (greedy engine) or a (V,) logits row (sampling
@@ -335,7 +458,12 @@ class LMService:
     def _emit_first(self, slot, out, hidden_row):
         """Common tail of whole-prompt insert and final-chunk completion:
         TTFT, probe feed, first-token emit, possible immediate retirement."""
-        self._ttft.append(time.perf_counter() - slot.future.t_submit)
+        tr = _trace_of(slot.future)
+        if tr is not None:
+            tr.mark_first()
+            self._ttft.append(tr.ttft_s)
+        else:
+            self._ttft.append(time.perf_counter() - slot.future.t_submit)
         self._feed_probe(hidden_row)
         if slot.emit(self._pick_token(slot, out)):
             self._finish(self.engine.pool.retire(slot.index))
@@ -349,55 +477,86 @@ class LMService:
         from repro.decorr.probe import slot_probe_rows
 
         pool = self.engine.pool
+        rec = self.obs.recorder
         want = max(pool.free_slots() - len(self._pending), 0)
         reqs = self.batcher.next_requests(want, timeout=timeout)
         shutting_down = reqs is None
         self._pending.extend(reqs or [])
         while self._pending and pool.free_slots():
             if not self.engine.can_admit(self._pending[0].x):
-                break  # FIFO: later arrivals must not starve the head
+                # FIFO: later arrivals must not starve the head
+                rec.record("defer", prompt_len=self._pending[0].x.prompt_len,
+                           pending=len(self._pending))
+                break
             r = self._pending.pop(0)
             slot = pool.admit(r.x, r.future)
             self.engine.admit_slot(slot)
+            tr = _trace_of(r.future)
+            if tr is not None:
+                tr.mark_admit(slot=slot.index, queue_depth=self.batcher.depth())
+            rec.record("admit", slot=slot.index, prompt_len=r.x.prompt_len,
+                       chunked=slot.prefilling, queue_depth=self.batcher.depth())
             if slot.prefilling:
                 continue  # chunked: first token arrives when the prompt is in
+            t0 = time.perf_counter()
             try:
                 out, hidden_row = self.engine.insert(slot)
             except Exception as e:  # pragma: no cover - device failure path
-                self._errors += 1
                 self.engine.abort_slot(slot.index)
                 pool.retire(slot.index)
-                r.future.set_exception(e)
+                self._fail(r.future, e)
                 continue
+            if self.obs.enabled:
+                t1 = time.perf_counter()
+                self._h_prefill.observe(t1 - t0)
+                self.obs.tracer.add_span("prefill_exec", t0, t1, cat="exec",
+                                         slot=slot.index, prompt_len=r.x.prompt_len)
             self._emit_first(slot, out, hidden_row)
         chunk_slot = self.engine.prefilling_slot() if self.engine.prefill_chunk else None
         if chunk_slot is not None:
+            t0 = time.perf_counter()
             try:
                 res = self.engine.advance_prefill(chunk_slot)
             except Exception as e:  # pragma: no cover - device failure path
-                self._errors += 1
                 self.engine.abort_slot(chunk_slot.index)
-                pool.retire(chunk_slot.index).future.set_exception(e)
+                self._fail(pool.retire(chunk_slot.index).future, e)
             else:
+                if self.obs.enabled:
+                    t1 = time.perf_counter()
+                    self._h_chunk.observe(t1 - t0)
+                    self.obs.tracer.add_span("prefill_chunk", t0, t1, cat="exec",
+                                             slot=chunk_slot.index)
                 if res is not None:
                     self._emit_first(chunk_slot, *res)
         active = pool.decoding_indices()
         if active:
+            t0 = time.perf_counter()
             try:
                 next_out, hidden = self.engine.decode_step()
             except Exception as e:  # pragma: no cover - device failure path
-                self._errors += 1
                 for i in pool.active_indices():
                     self.engine.abort_slot(i)
-                    pool.retire(i).future.set_exception(e)
+                    self._fail(pool.retire(i).future, e)
             else:
+                if self.obs.enabled:
+                    t1 = time.perf_counter()
+                    self._h_decode.observe(t1 - t0)
+                    self.obs.tracer.add_span("decode_step", t0, t1, cat="exec",
+                                             lanes=len(active))
                 # occupancy counts the lanes that actually decoded this step
                 # (retirement happens after), matching the probe's row feed
                 pool.observe_step()
                 self._feed_probe(slot_probe_rows(hidden, active))
                 for i in active:
-                    if pool[i].emit(self._pick_token(pool[i], next_out[i])):
+                    s = pool[i]
+                    tr = _trace_of(s.future)
+                    if tr is not None:
+                        tr.tick()
+                    if s.emit(self._pick_token(s, next_out[i])):
                         self._finish(pool.retire(i))
+        if active or self._pending or reqs:
+            rec.record("tick", decoded=len(active), free=pool.free_slots(),
+                       pending=len(self._pending), queue_depth=self.batcher.depth())
         self.heartbeat.beat(HEARTBEAT_LM)
         if shutting_down and not pool.active() and not self._pending:
             return None
@@ -451,7 +610,7 @@ class LMService:
     def metrics(self) -> Dict[str, float]:
         dt = max(time.perf_counter() - self._t0, 1e-9)
         ttft = np.asarray(self._ttft) if self._ttft else np.zeros((1,))
-        out = {
+        own = {
             "queue_depth": float(self.batcher.depth()),
             "dispatch_errors": float(self._errors),
             "tokens_total": float(self.tokens_total),
@@ -459,12 +618,17 @@ class LMService:
             "ttft_p50_ms": float(np.percentile(ttft, 50) * 1e3),
             "ttft_p99_ms": float(np.percentile(ttft, 99) * 1e3),
         }
-        out.update(self.engine.pool.metrics())
+        paged = None
         if self.engine.paged:
-            out["admission_deferred"] = float(len(self._pending))
-            out.update(self.engine.pager.metrics())
-        out.update(self.stats.metrics())
-        out.update(self.heartbeat.metrics())
-        if self.probe is not None:
-            out.update(self.probe.metrics())
-        return out
+            paged = dict(self.engine.pager.metrics(),
+                         admission_deferred=float(len(self._pending)))
+        return collect_metrics(
+            own,
+            self.engine.pool,
+            paged,
+            self.stats,
+            self.heartbeat,
+            self.probe,
+            self.obs,
+            registry=self.obs.registry,
+        )

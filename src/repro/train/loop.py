@@ -39,9 +39,14 @@ def run_training(
     cfg: LoopConfig,
     log_fn: Callable[[int, Dict], None] = None,
     fault_hook: Optional[Callable[[int], None]] = None,
+    registry=None,
 ) -> TrainState:
     """batch_fn(step) -> device-ready batch (deterministic per step).
-    fault_hook(step) may raise RuntimeError to simulate transient faults."""
+    fault_hook(step) may raise RuntimeError to simulate transient faults.
+    ``registry`` (an ``repro.obs.MetricsRegistry``) gets a per-step wall-time
+    histogram + step counter every step, and ``train_``-prefixed gauges of
+    the training metrics at each log interval (where they are already
+    host-synced — never on the hot path)."""
     mgr = (
         CheckpointManager(cfg.ckpt_dir, interval=cfg.ckpt_interval, keep=cfg.ckpt_keep)
         if cfg.ckpt_dir
@@ -49,6 +54,10 @@ def run_training(
     )
     preempt = PreemptionSignal(cfg.preempt_flag) if cfg.preempt_flag else None
     watchdog = StragglerWatchdog()
+    h_step = c_steps = None
+    if registry is not None:
+        h_step = registry.histogram("train_step_seconds", "one train step wall time")
+        c_steps = registry.counter("train_steps_total", "train steps run")
 
     # auto-resume
     start_step = int(state.step)
@@ -71,11 +80,20 @@ def run_training(
         watchdog.step_start()
         state, metrics = step_with_retry(step, state)
         watchdog.step_end()
+        if registry is not None:
+            h_step.observe(watchdog.durations[-1])
+            c_steps.inc()
 
-        if log_fn is not None and (step + 1) % cfg.log_interval == 0:
+        if (step + 1) % cfg.log_interval == 0 and (log_fn is not None or registry is not None):
             host_metrics = {k: float(v) for k, v in metrics.items()}
             host_metrics["stragglers"] = watchdog.straggler_events
-            log_fn(step + 1, host_metrics)
+            if registry is not None:
+                registry.publish(
+                    {f"train_{k}": v for k, v in host_metrics.items()}
+                )
+                registry.gauge("train_step_seconds_median").set(watchdog.median)
+            if log_fn is not None:
+                log_fn(step + 1, host_metrics)
 
         if mgr is not None:
             mgr.save(int(state.step), state)

@@ -147,7 +147,9 @@ def test_heartbeat_missed_detection():
     assert m["heartbeat_components"] == 2.0
     assert m["heartbeat_stale"] == 1.0
     assert m["heartbeat_missed_events"] == 2.0
-    assert m["heartbeat_age_s:serve.dispatch"] == 3.5
+    # per-name ages are exposition-safe (dots sanitized) so alert rules can
+    # target them directly
+    assert m["heartbeat_age_s_serve_dispatch"] == 3.5
 
 
 def test_heartbeat_auto_registers_on_beat():
