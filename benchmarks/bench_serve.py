@@ -3,13 +3,16 @@ micro-batching on the ssl-paper reduced config, (LM path) whole-request
 ``greedy_generate`` vs continuous batching on a mixed-length workload, and
 (paged path) dense vs paged KV cache on a length-SKEWED workload — many
 short requests sharing a pool sized for the rare long one, the fragmentation
-case block tables exist for.  Emits ``BENCH_serve.json`` (p50/p99 latency +
-throughput per policy, probe health, probe-vs-oracle agreement, paged peak
-cache bytes vs the dense pool); CI gates (``benchmarks/compare.py``) that
-micro-batched >= naive, continuous >= whole-request (identical tokens),
-paged == dense tokens with strictly smaller peak cache bytes, probes match
-the training-path oracle, and no gated ratio regresses >20% against the
-committed baseline.
+case block tables exist for — and (prefix path) the prefix-sharing radix
+cache on a shared-prefix fan-out workload: warm requests resume chunked
+prefill past the cached pages.  Emits ``BENCH_serve.json`` (p50/p99 latency
++ throughput per policy, probe health, probe-vs-oracle agreement, paged peak
+cache bytes vs the dense pool, warm-vs-cold prefix TTFT + peak pages); CI
+gates (``benchmarks/compare.py``) that micro-batched >= naive, continuous >=
+whole-request (identical tokens), paged == dense tokens with strictly
+smaller peak cache bytes, prefix sharing == unshared tokens with strictly
+lower warm TTFT and peak pages, probes match the training-path oracle, and
+no gated ratio regresses >20% against the committed baseline.
 """
 
 from __future__ import annotations
@@ -38,6 +41,19 @@ PAGED = dict(
     slots=8,
     page_size=16,
     prefill_chunk=16,
+)
+# prefix sharing: 2 long prefixes fanned out to 7 requests each; page 16 with
+# chunk 8 and a 92-token prefix puts warm hits mid-page (h=88), so the
+# copy-on-write path runs, not just whole-page binding
+PREFIX = dict(
+    n_prefixes=2,
+    fan_out=7,
+    prefix_len=92,
+    tail_lens=(3, 5, 9),
+    new_tokens=(32, 48),
+    slots=4,
+    page_size=16,
+    prefill_chunk=8,
 )
 
 
@@ -82,6 +98,7 @@ def run():
 
     lm_report = _run_lm_continuous()
     paged_report = _run_paged()
+    prefix_report = _run_prefix()
     obs_report = _run_obs_overhead()
 
     out = {
@@ -92,6 +109,7 @@ def run():
             "buckets": list(bucket_sizes(policy)),
             "lm": LM,
             "paged": PAGED,
+            "prefix": PREFIX,
         },
         "naive": report["naive"],
         "microbatch": report["microbatch"],
@@ -102,6 +120,7 @@ def run():
         "gate": report["gate"],
         "lm": lm_report,
         "paged": paged_report,
+        "prefix": prefix_report,
         "obs": obs_report,
     }
     with open(os.path.join(os.getcwd(), "BENCH_serve.json"), "w") as f:
@@ -147,6 +166,22 @@ def run():
         f"ok={pg['paged_peak_lt_dense']};bytes_ratio={pg['peak_cache_bytes_ratio']:.3f};"
         f"token_mismatches={pg['token_mismatches']:.0f};"
         f"tok_per_s_ratio={pg['tok_per_s_ratio']:.2f}",
+    ))
+    for name in ("unshared", "shared"):
+        r = prefix_report[name]
+        rows.append(fmt_row(
+            f"serve/prefix_{name}", r["warm_ttft_p50_ms"] * 1e3,
+            f"tok_per_s={r['tok_per_s']:.0f};peak_pages={r['peak_pages']:.0f}",
+        ))
+    xg = prefix_report["gate"]
+    rows.append(fmt_row(
+        "serve/gate_prefix_sharing", 0.0,
+        f"ok={xg['warm_ttft_lt_unshared'] and xg['peak_pages_lt_unshared']};"
+        f"hit_rate={xg['prefix_hit_rate']:.2f};"
+        f"warm_ttft_ratio={xg['warm_ttft_ratio']:.3f};"
+        f"peak_pages_ratio={xg['peak_pages_ratio']:.3f};"
+        f"token_mismatches={xg['token_mismatches']:.0f};"
+        f"probe_oracle_rel_err={xg.get('probe_oracle_rel_err', float('nan')):.2e}",
     ))
     for name in ("off", "on"):
         r = obs_report[name]
@@ -217,6 +252,39 @@ def _run_paged():
         n_slots=PAGED["slots"],
         page_size=PAGED["page_size"],
         prefill_chunk=PAGED["prefill_chunk"],
+    )
+
+
+def _run_prefix():
+    """Prefix sharing on vs off over the same paged chunk-all engine on a
+    shared-prefix fan-out workload (the acceptance gate: bit-identical
+    tokens, warm-phase TTFT and peak pool pages both strictly below the
+    unshared run, with the in-flight probe still oracle-exact under page
+    sharing)."""
+    from repro.configs import get_config
+    from repro.decorr.config import DecorrConfig
+    from repro.models import init_params
+    from repro.serve import DecorrProbe
+    from repro.serve.loadgen import SharedPrefixLoadConfig, compare_prefix_sharing
+
+    cfg = get_config(LM["arch"]).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    load = SharedPrefixLoadConfig(
+        n_prefixes=PREFIX["n_prefixes"],
+        fan_out=PREFIX["fan_out"],
+        prefix_len=PREFIX["prefix_len"],
+        tail_lens=PREFIX["tail_lens"],
+        new_tokens=PREFIX["new_tokens"],
+    )
+    return compare_prefix_sharing(
+        cfg,
+        params,
+        load,
+        n_slots=PREFIX["slots"],
+        page_size=PREFIX["page_size"],
+        prefill_chunk=PREFIX["prefill_chunk"],
+        probe_fn=lambda: DecorrProbe(DecorrConfig(style="vic", reg="sum", q=2)),
+        record_probe_rows=True,
     )
 
 

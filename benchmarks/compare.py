@@ -64,6 +64,16 @@ HARD_GATES = {
          "paged KV cache changes no request's greedy tokens"),
         ("paged.gate.paged_peak_lt_dense", lambda v: bool(v),
          "paged peak cache bytes < dense pool at the skewed length mix"),
+        ("prefix.gate.token_mismatches", lambda v: v == 0,
+         "prefix sharing changes no request's greedy tokens"),
+        ("prefix.gate.warm_ttft_lt_unshared", lambda v: bool(v),
+         "warm-prefix TTFT strictly below the unshared paged run"),
+        ("prefix.gate.peak_pages_lt_unshared", lambda v: bool(v),
+         "prefix sharing's peak pool pages strictly below unshared"),
+        ("prefix.gate.prefix_hit_rate", lambda v: v > 0,
+         "the radix cache actually served hits on the fan-out workload"),
+        ("prefix.gate.probe_oracle_rel_err", lambda v: v < 1e-3,
+         "in-flight probe matches training oracle under page sharing"),
         ("obs.gate.overhead_ok", lambda v: bool(v),
          "always-on telemetry keeps >= 95% of telemetry-off tok/s"),
     ],
@@ -81,6 +91,8 @@ RATIO_METRICS = {
         # allocator) — gate it; tok_per_s_ratio is reported in the JSON but
         # too load-sensitive on CPU CI to gate against a snapshot baseline
         "paged_peak_bytes_ratio": (-1, "paged.gate.peak_cache_bytes_ratio"),
+        # deterministic for the same reason: page arithmetic, not wall clock
+        "prefix_peak_pages_ratio": (-1, "prefix.gate.peak_pages_ratio"),
     },
     "tune": {},  # per-kernel ratios generated from the report
 }

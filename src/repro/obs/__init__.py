@@ -46,6 +46,7 @@ from repro.obs.registry import (
     Histogram,
     MetricsRegistry,
     default_registry,
+    quantile_from_buckets,
     sanitize_name,
 )
 from repro.obs.tracing import RequestTrace, Tracer, reconstruct_request
@@ -65,6 +66,7 @@ __all__ = [
     "Tracer",
     "default_registry",
     "default_serve_rules",
+    "quantile_from_buckets",
     "reconstruct_request",
     "sanitize_name",
 ]

@@ -220,7 +220,10 @@ def default_serve_rules() -> List[AlertRule]:
                   window=3, severity="critical"),
         AlertRule("heartbeat_stale", "heartbeat_stale", ">", 0.0,
                   severity="critical"),
-        AlertRule("ttft_p99_high_ms", "ttft_p99_ms", ">", 5000.0,
+        # reads the scrape-time histogram-derived quantile gauge
+        # (registry.quantile_gauges over serve_ttft_seconds buckets), not the
+        # service's own rolling-window percentile — one TTFT stream of record
+        AlertRule("ttft_p99_high", "serve_ttft_seconds_p99", ">", 5.0,
                   window=2, severity="warning"),
         AlertRule("page_pool_pressure", "paged_pages_utilization", ">", 0.95,
                   window=3, severity="warning"),

@@ -81,10 +81,17 @@ class Obs:
         service's ``metrics`` (which republishes its gauges as a side
         effect); without one, rules run over the registry's current view."""
         if metrics_fn is not None:
-            m = metrics_fn()
+            m = dict(metrics_fn())
             self.registry.publish(m)  # idempotent for callers that publish
         else:
             m = self.registry.as_dict()
+        # derive histogram-quantile gauges (serve_ttft_seconds_p99, ...) from
+        # bucket counts BEFORE rule evaluation, so alert rules read the same
+        # stream the service observes into — not a parallel percentile gauge
+        derived = self.registry.quantile_gauges()
+        if derived:
+            self.registry.publish(derived)
+            m.update(derived)
         self.check_alerts(m)
         return self.registry.exposition()
 

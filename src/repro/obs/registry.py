@@ -206,6 +206,31 @@ class _HistogramChild:
         return rows
 
 
+def quantile_from_buckets(bounds: Sequence[float], counts: Sequence[int],
+                          q: float) -> float:
+    """``histogram_quantile``-style estimate from per-bucket counts.
+
+    ``bounds``: finite ascending upper bounds; ``counts``: per-bucket (NOT
+    cumulative) observation counts with the +Inf bucket last
+    (``len(counts) == len(bounds) + 1``).  Linear interpolation inside the
+    bucket holding the target rank (from 0 at the bucket's lower bound);
+    ranks in the +Inf bucket clamp to the highest finite bound, matching
+    Prometheus.  Returns 0.0 for an empty histogram."""
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile must be in [0, 1], got {q}")
+    total = sum(counts)
+    if total == 0:
+        return 0.0
+    rank = q * total
+    acc, lo = 0.0, 0.0
+    for b, c in zip(bounds, counts):
+        if c > 0 and acc + c >= rank:
+            return lo + (b - lo) * max(rank - acc, 0.0) / c
+        acc += c
+        lo = b
+    return float(bounds[-1])
+
+
 class Counter(Metric):
     kind = "counter"
 
@@ -265,6 +290,13 @@ class Histogram(Metric):
     @property
     def sum(self) -> float:
         return self._default_child().sum
+
+    def quantile(self, q: float) -> float:
+        """Bucket-estimated quantile of everything observed so far."""
+        child = self._default_child()
+        with child._lock:
+            counts = list(child.counts)
+        return quantile_from_buckets(self.buckets, counts, q)
 
 
 class MetricsRegistry:
@@ -335,6 +367,26 @@ class MetricsRegistry:
             return None
         child = m.labels(**labels) if labels else m._default_child()
         return child.value
+
+    def quantile_gauges(self, quantiles: Sequence[float] = (0.5, 0.99)) -> Dict[str, float]:
+        """Derived ``<hist>_p50``/``<hist>_p99``-style gauges from every
+        UNLABELLED histogram's bucket counts (labelled children need
+        cross-series aggregation — out of scope).  The scrape path publishes
+        these each cycle so alert rules can target histogram quantiles
+        directly: one observation stream, no parallel percentile state."""
+        out: Dict[str, float] = {}
+        for m in self.metrics():
+            if not isinstance(m, Histogram) or m.labelnames:
+                continue
+            with m._lock:
+                child = m._children.get(())
+                counts = list(child.counts) if child is not None else None
+            if counts is None:
+                continue
+            for q in quantiles:
+                suffix = f"_p{round(q * 100):g}"
+                out[f"{m.name}{suffix}"] = quantile_from_buckets(m.buckets, counts, q)
+        return out
 
     def as_dict(self) -> Dict[str, float]:
         """Flat ``{exposition sample name: value}`` view of everything.

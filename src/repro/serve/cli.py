@@ -19,6 +19,10 @@ scrape metrics.
         --continuous --paged --block-size 16 --prefill-chunk 16 \
         --temperature 0.8 --top-k 8
 
+    # + the prefix-sharing radix cache gate (warm TTFT / peak pages / tokens)
+    PYTHONPATH=src python -m repro.serve.cli --smoke --lm-arch gemma2-2b \
+        --continuous --paged --block-size 16 --prefill-chunk 16 --prefix-cache
+
 ``--pretune`` warms the repro.tune cache for the serve bucket shapes first —
 the same job list ``python -m repro.tune.cli --serve`` persists offline.
 """
@@ -248,6 +252,9 @@ def _run_lm_continuous(args, cfg, params) -> int:
     paged_ok = True
     if args.paged:
         paged_ok = _gate_paged(args, cfg, params, load)
+    prefix_ok = True
+    if args.prefix_cache:
+        prefix_ok = _gate_prefix(args, cfg, params)
     if args.temperature or args.top_k:
         _demo_sampling(args, cfg, params)
     if args.json:
@@ -262,6 +269,7 @@ def _run_lm_continuous(args, cfg, params) -> int:
         and probe_err is not None
         and probe_err < 1e-3
         and paged_ok
+        and prefix_ok
         and obs_ok
     )
     return 0 if ok or not args.gate else 1
@@ -286,6 +294,34 @@ def _gate_paged(args, cfg, params, load) -> bool:
         f"tok/s ratio {g['tok_per_s_ratio']:.2f})"
     )
     return bool(g["paged_peak_lt_dense"]) and g["token_mismatches"] == 0
+
+
+def _gate_prefix(args, cfg, params) -> bool:
+    """Prefix sharing on vs off over the same paged chunk-all engine on a
+    shared-prefix fan-out workload: bit-identical tokens, warm-phase TTFT and
+    peak pool pages both strictly below the unshared run.  The engine shape
+    is pinned (4 slots, page 16, chunk 8) to match the workload defaults —
+    this is a regression gate over a known-stressing shape (the chunk must
+    halve the page or copy-on-write never triggers), not a knob explorer."""
+    from repro.serve.loadgen import SharedPrefixLoadConfig, compare_prefix_sharing
+
+    load = SharedPrefixLoadConfig(seed=args.seed)
+    rep = compare_prefix_sharing(
+        cfg, params, load, n_slots=4, page_size=16, prefill_chunk=8,
+    )
+    g = rep["gate"]
+    print(
+        f"[serve] prefix cache: hit_rate={g['prefix_hit_rate']:.2f} "
+        f"warm_ttft_ratio={g['warm_ttft_ratio']:.3f} "
+        f"peak_pages_ratio={g['peak_pages_ratio']:.3f} "
+        f"(token mismatches: {g['token_mismatches']:.0f})"
+    )
+    return (
+        g["token_mismatches"] == 0
+        and bool(g["warm_ttft_lt_unshared"])
+        and bool(g["peak_pages_lt_unshared"])
+        and g["prefix_hit_rate"] > 0
+    )
 
 
 def _demo_sampling(args, cfg, params):
@@ -365,6 +401,10 @@ def main(argv=None) -> int:
     p.add_argument("--prefill-chunk", type=int, default=None,
                    help="with --paged: prefill long prompts N tokens per decode "
                         "tick instead of stalling the pool")
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="with --paged: also gate the prefix-sharing radix "
+                        "cache (bit-identical tokens + warm TTFT and peak "
+                        "pages strictly below the unshared paged run)")
     p.add_argument("--temperature", type=float, default=0.0,
                    help="run a sampled demo batch after the greedy gates "
                         "(0 = greedy only)")
@@ -383,6 +423,9 @@ def main(argv=None) -> int:
                    help="alert rules as a JSON file path or inline JSON list "
                         "(default: the built-in serve rules)")
     args = p.parse_args(argv)
+
+    if args.prefix_cache and not args.paged:
+        p.error("--prefix-cache shares KV pages; it requires --paged")
 
     if args.smoke:
         args.requests = min(args.requests, 192)

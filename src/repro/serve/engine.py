@@ -237,6 +237,18 @@ class ContinuousLMEngine:
         of in-jit argmax; the service draws tokens host-side per request
         (``repro.serve.sampling``: temperature/top-k, per-request PRNG;
         temperature 0 stays bit-identical greedy).
+      * ``prefix_cache=True`` (paged) — retired prompts donate their full KV
+        pages to a radix tree (``repro.serve.paging.radix``); a warm request
+        binds the matched pages into its block table read-only (refcounted,
+        reservation charges only the unshared tail), copy-on-writes the
+        boundary page when the hit ends mid-page, and resumes chunked
+        prefill at the hit — skipping the shared prefix's FLOPs entirely.
+        Forces ``chunk_all`` (every prompt runs the chunked-prefill
+        executable, warm or cold, resuming on the same chunk grid), which is
+        what keeps tokens bit-identical to unshared paging: the hit is
+        quantized DOWN to a chunk boundary (and to ``prompt_len - 1``), so a
+        warm prefill replays the exact executables on the exact values the
+        cold run would produce from that boundary on.
     """
 
     def __init__(
@@ -255,6 +267,8 @@ class ContinuousLMEngine:
         prefill_chunk: Optional[int] = None,
         sampling: bool = False,
         compact_on_retire: bool = True,
+        prefix_cache: bool = False,
+        chunk_all: bool = False,
     ):
         from repro.models.transformer import init_caches
         from repro.serve.slots import SlotPool
@@ -262,6 +276,7 @@ class ContinuousLMEngine:
             apply_page_moves,
             insert_slot_state,
             insert_slot_state_paged,
+            load_template_from_pages,
             make_chunked_prefill_step,
             make_decode_step,
             make_prefill_at_step,
@@ -287,6 +302,13 @@ class ContinuousLMEngine:
         self.recorder = None
 
         self.paged = bool(paged)
+        self.prefix_cache = bool(prefix_cache)
+        # chunk_all: every prompt (even <= one chunk) runs the chunked-prefill
+        # executable.  Prefix caching forces it — warm resumption must land on
+        # the same chunk grid the cold run used, or tokens drift.
+        self.chunk_all = bool(chunk_all) or self.prefix_cache
+        if self.prefix_cache and not self.paged:
+            raise ValueError("prefix_cache shares KV pages; pass paged=True")
         self.pager = None
         if self.paged:
             from repro.kernels.paged_attention.ops import auto_page_size
@@ -302,11 +324,21 @@ class ContinuousLMEngine:
             # mass underflowing to 0.0) is what makes paged greedy decode
             # bit-identical to the dense engine
             max_len = next_multiple(max_len, page)
+            if self.prefix_cache and not prefill_chunk:
+                prefill_chunk = page  # hit grid == page grid: COW only on cap
             self.pager = PagedKVManager(
-                arch_cfg, n_slots, max_len, page, total_pages=total_pages
+                arch_cfg, n_slots, max_len, page, total_pages=total_pages,
+                prefix_cache=self.prefix_cache,
+                prefix_chunk=int(prefill_chunk) if self.prefix_cache else None,
             )
+            if self.prefix_cache:
+                self.pager.event_sink = self._record
 
         self.prefill_chunk = int(prefill_chunk) if prefill_chunk else None
+        if self.chunk_all and self.prefill_chunk is None:
+            raise ValueError(
+                "chunk_all rides chunked prefill; pass prefill_chunk (paged)"
+            )
         if self.prefill_chunk is not None:
             if not self.paged:
                 raise ValueError("prefill_chunk rides the paged machinery; pass paged=True")
@@ -375,6 +407,12 @@ class ContinuousLMEngine:
             self._insert = jax.jit(insert_slot_state_paged, donate_argnums=(0,))
             self._reset = jax.jit(reset_slot_state_paged, donate_argnums=(0,))
             self._moves = jax.jit(apply_page_moves, donate_argnums=(0,))
+            if self.prefix_cache:
+                # warm-template gather (no donation: pool and template live on)
+                self._loadtpl = jax.jit(load_template_from_pages)
+                # one-deep plan memo from can_admit to admit_slot (same tick,
+                # same head-of-line request — no allocation happens between)
+                self._plan_stash: Tuple[Optional[int], Optional[object]] = (None, None)
         else:
             self._insert = jax.jit(insert_slot_state, donate_argnums=(0,))
             self._reset = jax.jit(reset_slot_state, donate_argnums=(0,))
@@ -437,6 +475,12 @@ class ContinuousLMEngine:
         (deferred, not rejected, otherwise — OOM-safe admission)."""
         if not self.paged:
             return True
+        if self.prefix_cache:
+            plan = self.pager.plan_prefix(request.tokens, request.prompt_len)
+            self._plan_stash = (id(request), plan)
+            return self.pager.can_admit(
+                request.prompt_len, request.max_new_tokens, plan=plan
+            )
         return self.pager.can_admit(request.prompt_len, request.max_new_tokens)
 
     # -- compile cache -------------------------------------------------------
@@ -470,9 +514,13 @@ class ContinuousLMEngine:
             bt = jnp.zeros((self.pool.n_slots, nb), jnp.int32)
             _, _, self.caches = self._decode(self.params, self.caches, lens, toks, bt)
             self.caches = self._reset(self.caches, np.int32(0), bt_row)
-            if self.compact_on_retire:
+            if self.compact_on_retire or self.prefix_cache:
+                # compaction AND the prefix COW reuse the same executable
                 idx = jnp.zeros((nb,), jnp.int32)
                 self.caches = self._moves(self.caches, idx, idx)
+            if self.prefix_cache:
+                # warm-template gather (all-sentinel row reads scratch rows)
+                self._loadtpl(self.caches, self._caches1, bt_row)
         else:
             _, _, self.caches = self._decode(self.params, self.caches, lens, toks)
             self.caches = self._reset(self.caches, np.int32(0))
@@ -484,15 +532,31 @@ class ContinuousLMEngine:
     # -- slot mechanics ------------------------------------------------------
 
     def needs_chunking(self, prompt_len: int) -> bool:
-        return self.prefill_chunk is not None and prompt_len > self.prefill_chunk
+        if self.prefill_chunk is None:
+            return False
+        return self.chunk_all or prompt_len > self.prefill_chunk
 
-    def admit_slot(self, slot):
-        """Post-``pool.admit`` hook: charge the paged reservation and flag
-        chunked prompts as still-prefilling (``prefill_pos`` 0)."""
+    def admit_slot(self, slot) -> int:
+        """Post-``pool.admit`` hook: charge the paged reservation (binding +
+        pinning any matched prefix pages) and flag chunked prompts as
+        still-prefilling.  Returns the prefix-cache hit in rows — chunked
+        prefill resumes there (0 cold/unshared)."""
+        req = slot.request
+        hit = 0
         if self.paged:
-            self.pager.admit(slot.index, slot.request.prompt_len, slot.request.max_new_tokens)
-        if self.needs_chunking(slot.request.prompt_len):
-            slot.prefill_pos = 0
+            if self.prefix_cache:
+                key, plan = self._plan_stash
+                if key != id(req):
+                    plan = self.pager.plan_prefix(req.tokens, req.prompt_len)
+                self._plan_stash = (None, None)
+                hit = self.pager.admit(
+                    slot.index, req.prompt_len, req.max_new_tokens, plan=plan
+                )
+            else:
+                self.pager.admit(slot.index, req.prompt_len, req.max_new_tokens)
+        if self.needs_chunking(req.prompt_len):
+            slot.prefill_pos = hit
+        return hit
 
     def _record(self, kind: str, **fields):
         if self.recorder is not None:
@@ -504,8 +568,20 @@ class ContinuousLMEngine:
             if added:
                 self._record("page_alloc", slot=slot.index, pages=len(added),
                              in_use=self.pager.alloc.in_use)
-            bt_row = jnp.asarray(self.pager.table_row(slot.index))
+            if self.prefix_cache:
+                # shared prefix blocks are masked to the sentinel: the insert
+                # must never rewrite a read-only shared page
+                row = self.pager.scatter_row(slot.index)
+            else:
+                row = self.pager.table_row(slot.index)
+            bt_row = jnp.asarray(row)
             self.caches = self._insert(self.caches, one, np.int32(slot.index), bt_row)
+            if self.prefix_cache:
+                # the pages now hold the final prompt KV: intern the full
+                # prompt pages for future warm requests (first writer wins)
+                donated = self.pager.donate(slot.index, slot.request.tokens)
+                if donated:
+                    self._record("page_donate", slot=slot.index, pages=donated)
         else:
             self.caches = self._insert(self.caches, one, np.int32(slot.index))
 
@@ -542,7 +618,27 @@ class ContinuousLMEngine:
         req = slot.request
         n, c = req.prompt_len, self.prefill_chunk
         if self._chunk_live is None:
-            self._chunk_live = [slot.index, self._caches1]
+            tree = self._caches1
+            if self.prefix_cache:
+                moves = self.pager.cow_moves(slot.index)
+                if moves is not None:
+                    # copy-on-write of the boundary page BEFORE the template
+                    # gather reads it: writes never land on shared pages
+                    src, dst = moves
+                    self.caches = self._moves(
+                        self.caches, jnp.asarray(src), jnp.asarray(dst)
+                    )
+                    self._record("page_cow", slot=slot.index,
+                                 src=int(src[0]), dst=int(dst[0]))
+                if slot.prefill_pos > 0:
+                    # warm start: seed the batch-1 template with the shared
+                    # prefix's KV rows so chunks attend over them unrecomputed
+                    row = jnp.asarray(self.pager.table_row(slot.index))
+                    tree = self._loadtpl(self.caches, self._caches1, row)
+                    self._record("page_share", slot=slot.index,
+                                 rows=slot.prefill_pos,
+                                 pages=self.pager.alloc.shared_count(slot.index))
+            self._chunk_live = [slot.index, tree]
         if self._chunk_live[0] != slot.index:
             return None  # another prompt owns the work tree this tick
         off = slot.prefill_pos
@@ -588,7 +684,19 @@ class ContinuousLMEngine:
                 if added:
                     self._record("page_alloc", slot=i, pages=len(added),
                                  in_use=self.pager.alloc.in_use)
-            bt = jnp.asarray(self.pager.block_tables())
+            tables = self.pager.block_tables()
+            if self.prefix_cache:
+                # still-prefilling slots decode at lane position 0, and the
+                # paged write path unconditionally scatters each lane's k/v at
+                # block_tables[slot, 0] row 0.  Unshared, those tables are
+                # still empty (the write lands on the sentinel); with prefix
+                # pages bound at admission it would CORRUPT a shared page —
+                # mask every non-decoding lane's row to the sentinel.
+                decoding = set(self.pool.decoding_indices())
+                for i in range(self.pool.n_slots):
+                    if i not in decoding:
+                        tables[i, :] = 0  # SENTINEL
+            bt = jnp.asarray(tables)
             out, hidden, self.caches = self._decode(self.params, self.caches, lens, toks, bt)
         else:
             out, hidden, self.caches = self._decode(self.params, self.caches, lens, toks)
@@ -618,8 +726,11 @@ class ContinuousLMEngine:
             self._chunk_live = None
         if self.paged:
             if self.reset_on_retire:
-                bt_row = jnp.asarray(self.pager.table_row(index))
-                self.caches = self._reset(self.caches, np.int32(index), bt_row)
+                # under prefix caching, pages other owners still map (shared
+                # prefixes, donated pages) are masked out of the zeroing
+                row = (self.pager.reset_row(index) if self.prefix_cache
+                       else self.pager.table_row(index))
+                self.caches = self._reset(self.caches, np.int32(index), jnp.asarray(row))
             before = self.pager.alloc.in_use
             self.pager.release(index)
             self._record("page_free", slot=index,

@@ -373,6 +373,149 @@ def compare_paged_dense(
     return out
 
 
+@dataclasses.dataclass(frozen=True)
+class SharedPrefixLoadConfig:
+    """Shared-prefix LM workload (the RAG / few-shot / system-prompt shape):
+    ``n_prefixes`` distinct long prefixes, each fanned out to ``fan_out``
+    requests appending a short unique tail.  The stream is two-phase: one
+    COLD request per prefix first (its retire donates the prefix pages to the
+    radix cache when sharing is on), then the WARM fan-out whose TTFT the
+    comparison gates on."""
+
+    # Defaults are shaped so the comparison actually stresses sharing: decode
+    # long enough (vs the serialized chunk-at-a-time prefill) that slots
+    # overlap in BOTH runs, and a prefix long enough that the per-slot pages
+    # saved by sharing dominate what the radix cache retains.  prefix_len=92
+    # with page 16 / chunk 8 also exercises copy-on-write: a cold tail can
+    # extend the donated pages past the common prefix, so a warm hit lands
+    # mid-page (h=88) and must COW the boundary page.
+    n_prefixes: int = 2
+    fan_out: int = 7
+    prefix_len: int = 92
+    tail_lens: Tuple[int, ...] = (3, 5, 9)
+    new_tokens: Tuple[int, ...] = (32, 48)
+    seed: int = 0
+
+    def request_stream(
+        self, vocab_size: int
+    ) -> Tuple[List[Tuple[np.ndarray, int]], List[Tuple[np.ndarray, int]]]:
+        """Deterministic (cold, warm) request lists of ``(tokens, max_new)``."""
+        rng = np.random.default_rng(self.seed)
+        cold, warm = [], []
+        for p in range(self.n_prefixes):
+            prefix = rng.integers(0, vocab_size, size=self.prefix_len).astype(np.int32)
+            for f in range(self.fan_out):
+                i = p * self.fan_out + f
+                t = int(self.tail_lens[i % len(self.tail_lens)])
+                m = int(self.new_tokens[i % len(self.new_tokens)])
+                tail = rng.integers(0, vocab_size, size=t).astype(np.int32)
+                (cold if f == 0 else warm).append((np.concatenate([prefix, tail]), m))
+        return cold, warm
+
+    @property
+    def prompt_lens(self) -> Tuple[int, ...]:
+        return tuple(sorted({self.prefix_len + t for t in self.tail_lens}))
+
+    @property
+    def max_request_len(self) -> int:
+        return self.prefix_len + max(self.tail_lens) + max(self.new_tokens)
+
+
+def run_prefix_workload(service, load: SharedPrefixLoadConfig, timeout_s: float = 300.0):
+    """Cold phase, drained (so retiring prompts can donate pages to the radix
+    cache), then the warm fan-out as a closed-loop burst.  Returns
+    ``(summary, outs)`` with ``outs`` ordered cold-then-warm; the summary's
+    ``warm_ttft_*`` percentiles cover the warm phase only — that is the
+    latency the prefix cache is supposed to cut."""
+    cold, warm = load.request_stream(service.engine.cfg.vocab_size)
+    service.warmup(prompt_lens=[t.shape[0] for t, _ in cold + warm])
+    t_run = time.perf_counter()
+    cold_futs = [service.submit(t, m, block=True, timeout=timeout_s) for t, m in cold]
+    service.drain()
+    warm_futs = [service.submit(t, m, block=True, timeout=timeout_s) for t, m in warm]
+    service.drain()
+    outs = [f.result(timeout=timeout_s) for f in cold_futs + warm_futs]
+    wall = time.perf_counter() - t_run
+    n_tok = sum(len(o) for o in outs)
+    summary = _lm_summary(_trace_latencies(cold_futs + warm_futs), n_tok, wall)
+    ttfts = _trace_ttfts(warm_futs)
+    if ttfts:
+        summary["warm_ttft_p50_ms"] = float(np.percentile(ttfts, 50) * 1e3)
+        summary["warm_ttft_p99_ms"] = float(np.percentile(ttfts, 99) * 1e3)
+    return summary, outs
+
+
+def compare_prefix_sharing(
+    arch_cfg,
+    params,
+    load: SharedPrefixLoadConfig,
+    *,
+    n_slots: int = 8,
+    max_len: Optional[int] = None,
+    page_size: int = 16,
+    prefill_chunk: int = 8,
+    total_pages: Optional[int] = None,
+    probe_fn=None,
+    record_probe_rows: bool = False,
+    obs=None,
+) -> Dict[str, Dict[str, float]]:
+    """Prefix sharing ON vs OFF over the same paged chunk-all engine on the
+    same two-phase workload.  The OFF run uses ``chunk_all=True`` too, so
+    both runs execute identical chunked-prefill/decode executables on
+    identical values — greedy tokens must be BIT-IDENTICAL per request (the
+    hard gate).  The perf story: warm-phase TTFT and the pool's peak
+    allocated pages must both be strictly lower with sharing on."""
+    from repro.serve.engine import ContinuousLMEngine
+    from repro.serve.service import LMService
+
+    max_len = int(max_len or max(load.max_request_len + 8, 32))
+    max_len = -(-max_len // page_size) * page_size  # identical shapes both ways
+
+    def run(prefix_cache: bool):
+        engine = ContinuousLMEngine(
+            arch_cfg, params, n_slots=n_slots, max_len=max_len,
+            max_prompt_len=max(load.prompt_lens), paged=True,
+            page_size=page_size, prefill_chunk=prefill_chunk, chunk_all=True,
+            prefix_cache=prefix_cache, total_pages=total_pages,
+        )
+        probe = probe_fn() if (probe_fn is not None and prefix_cache) else None
+        service = LMService(
+            engine, probe=probe,
+            record_probe_rows=record_probe_rows and prefix_cache,
+            obs=obs if prefix_cache else None,
+        )
+        summary, outs = run_prefix_workload(service, load)
+        return summary, outs, service
+
+    base, base_outs, base_svc = run(prefix_cache=False)
+    shared, shared_outs, shared_svc = run(prefix_cache=True)
+    mismatches = sum(
+        1 for a, b in zip(base_outs, shared_outs) if not np.array_equal(a, b)
+    )
+    base_peak = base_svc.engine.pager.alloc.peak_pages
+    shared_peak = shared_svc.engine.pager.alloc.peak_pages
+    pm = shared_svc.engine.pager.metrics()
+    out = {
+        "unshared": dict(base, peak_pages=float(base_peak)),
+        "shared": dict(shared, peak_pages=float(shared_peak), **pm),
+        "gate": {
+            "token_mismatches": float(mismatches),
+            "warm_ttft_lt_unshared": bool(
+                shared["warm_ttft_p50_ms"] < base["warm_ttft_p50_ms"]
+            ),
+            "warm_ttft_ratio": shared["warm_ttft_p50_ms"] / max(base["warm_ttft_p50_ms"], 1e-9),
+            "peak_pages_lt_unshared": bool(shared_peak < base_peak),
+            "peak_pages_ratio": shared_peak / max(base_peak, 1),
+            "prefix_hit_rate": pm["paged_prefix_hit_rate"],
+        },
+    }
+    if record_probe_rows:
+        err = lm_probe_oracle_err(shared_svc)
+        if err is not None:
+            out["gate"]["probe_oracle_rel_err"] = err
+    return out
+
+
 def lm_probe_oracle_err(service) -> Optional[float]:
     """Replay the last full probe window against the offline training-path
     oracle (``decorr.probe_metrics`` with the same step-folded permutation

@@ -6,30 +6,41 @@ replaces that with fixed-size token *pages* handed out by a free-list
 allocator and addressed through per-slot block tables:
 
   * ``allocator`` — host-side bookkeeping: ``PageAllocator`` (min-heap free
-    list, reservation-based OOM-safe admission, copy-on-retire compaction
-    planning), sentinel page 0 for unassigned table entries;
+    list, reservation-based OOM-safe admission, refcount/pin accounting for
+    shared pages, copy-on-retire compaction planning), sentinel page 0 for
+    unassigned table entries;
   * ``manager``   — ``PagedKVManager``: the (n_slots, NB) block-table array
     the decode step consumes, device-pool construction via
-    ``models.transformer.init_paged_caches``, and the byte accounting the
-    bench gate compares against the dense pool.
+    ``models.transformer.init_paged_caches``, prefix-plan admission, and the
+    byte accounting the bench gate compares against the dense pool;
+  * ``radix``     — ``RadixCache``: page-granular prefix interning of retired
+    prompts with LRU tail-truncation eviction (the prefix-sharing cache
+    behind ``ContinuousLMEngine(prefix_cache=True)``).
 
 The tensor half lives in ``models/attention.py`` (block-table gather/scatter
 decode, Pallas kernel in ``kernels/paged_attention`` on TPU), the jitted slot
 surgery in ``repro.train.serve`` (``insert_slot_state_paged`` /
-``reset_slot_state_paged`` / ``apply_page_moves``), and the scheduling in
+``reset_slot_state_paged`` / ``apply_page_moves`` /
+``load_template_from_pages``), and the scheduling in
 ``serve.ContinuousLMEngine(paged=True)`` / ``serve.LMService``.
 """
 
 from repro.serve.paging.allocator import SENTINEL, PageAllocator, pages_for
 from repro.serve.paging.manager import (
     PagedKVManager,
+    PrefixPlan,
     attn_kv_bytes_per_row,
     dense_cache_bytes,
 )
+from repro.serve.paging.radix import PrefixMatch, RadixCache, RadixNode
 
 __all__ = [
     "PageAllocator",
     "PagedKVManager",
+    "PrefixMatch",
+    "PrefixPlan",
+    "RadixCache",
+    "RadixNode",
     "SENTINEL",
     "attn_kv_bytes_per_row",
     "dense_cache_bytes",

@@ -8,15 +8,31 @@ built by ``models.transformer.init_paged_caches`` (attention positions get
 page pools, recurrent state stays dense) and mutated by the jitted surgery
 in ``repro.train.serve`` (``insert_slot_state_paged`` / ``reset_slot_state_paged``
 / ``apply_page_moves``) — the manager only decides WHICH pages those touch.
+
+With ``prefix_cache=True`` the manager additionally runs a
+:class:`~repro.serve.paging.radix.RadixCache` over retired prompts:
+
+  * ``plan_prefix`` matches a new prompt against the tree and quantizes the
+    hit down to the engine's chunk grid (and to ``prompt_len - 1`` — the
+    last prompt token must always be recomputed to produce first-token
+    logits), so a warm request resumes chunked prefill exactly at a chunk
+    boundary the cold run would also have hit: bit-identical tokens.
+  * ``admit`` binds the matched pages into the slot's block table without
+    copying, pins them for the request's lifetime, and — when the hit ends
+    mid-page — charges one reservation page for a copy-on-write of the
+    boundary page (``cow_moves`` hands the engine the batched device copy).
+  * ``donate`` interns a completed prompt's full pages back into the tree at
+    retirement (first writer wins).
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.serve.paging.allocator import SENTINEL, PageAllocator
+from repro.serve.paging.radix import RadixCache
 
 
 def attn_kv_bytes_per_row(cfg) -> int:
@@ -32,6 +48,24 @@ def dense_cache_bytes(cfg, n_slots: int, max_len: int) -> int:
     return attn_kv_bytes_per_row(cfg) * n_slots * max_len
 
 
+class PrefixPlan:
+    """Admission-time plan from one radix lookup: what to share, what to COW,
+    and where chunked prefill may resume."""
+
+    __slots__ = ("hit", "shared", "cow_src", "matched_tokens")
+
+    def __init__(self, hit: int, shared: List[int], cow_src: Optional[int],
+                 matched_tokens: int):
+        self.hit = hit  # chunk-aligned cached rows (prefill resumes here)
+        self.shared = shared  # fully-covered pages to bind read-only
+        self.cow_src = cow_src  # page to copy when the hit ends mid-page
+        self.matched_tokens = matched_tokens  # raw (unquantized) match length
+
+    @property
+    def pin_pages(self) -> List[int]:
+        return self.shared + ([self.cow_src] if self.cow_src is not None else [])
+
+
 class PagedKVManager:
     """Block tables + reservation accounting for one slot pool."""
 
@@ -42,6 +76,8 @@ class PagedKVManager:
         max_len: int,
         page: int,
         total_pages: Optional[int] = None,
+        prefix_cache: bool = False,
+        prefix_chunk: Optional[int] = None,
     ):
         assert max_len % page == 0, (
             f"max_len={max_len} must be a multiple of the page size {page} "
@@ -62,6 +98,27 @@ class PagedKVManager:
         # bench does) while reservation accounting keeps admission OOM-safe.
         self.total_pages = int(total_pages or (self.n_slots * self.blocks_per_slot + 1))
         self.alloc = PageAllocator(self.total_pages, page, n_slots, self.blocks_per_slot)
+        self.prefix_cache = bool(prefix_cache)
+        self.radix: Optional[RadixCache] = None
+        # flight-recorder tap the engine installs (kind, **fields)
+        self.event_sink: Optional[Callable[..., None]] = None
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_cow_total = 0
+        if self.prefix_cache:
+            if not prefix_chunk or int(prefix_chunk) < 1:
+                raise ValueError(
+                    "prefix_cache quantizes hits to the chunked-prefill grid; "
+                    "pass prefix_chunk (the engine's prefill_chunk)"
+                )
+            self.prefix_chunk = int(prefix_chunk)
+            self.radix = RadixCache(self.page, self.alloc)
+            self.alloc.evict_hook = self._evict_for
+        # per-slot prefix state (only populated under prefix_cache)
+        self._plans: Dict[int, PrefixPlan] = {}
+        self._pins: Dict[int, List[int]] = {}
+        self._cow: Dict[int, Optional[Tuple[int, int]]] = {}
 
     # -- device tree construction --------------------------------------------
 
@@ -83,6 +140,26 @@ class PagedKVManager:
         """(n_slots, NB) int32 — what every paged decode step consumes."""
         return np.stack([self.table_row(s) for s in range(self.n_slots)], axis=0)
 
+    def scatter_row(self, slot: int) -> np.ndarray:
+        """Table row for the final-chunk scatter: fully-shared prefix blocks
+        are masked to the sentinel so the insert never rewrites a read-only
+        shared page (the duplicate writes land harmlessly on page 0)."""
+        row = self.table_row(slot)
+        plan = self._plans.get(slot)
+        if plan is not None:
+            row[: len(plan.shared)] = SENTINEL
+        return row
+
+    def reset_row(self, slot: int) -> np.ndarray:
+        """Table row for the retire-time zeroing: any page some other owner
+        still maps (shared prefixes, donated pages) is masked out — only the
+        slot's exclusive pages are scrubbed."""
+        row = self.table_row(slot)
+        for j, phys in enumerate(self.alloc.table(slot)):
+            if self.alloc.refcount(phys) > 1:
+                row[j] = SENTINEL
+        return row
+
     # -- admission / growth / retirement --------------------------------------
 
     def rows_needed(self, prompt_len: int, max_new_tokens: int) -> int:
@@ -93,18 +170,118 @@ class PagedKVManager:
     def fits_ever(self, prompt_len: int, max_new_tokens: int) -> bool:
         return self.alloc.fits_ever(self.rows_needed(prompt_len, max_new_tokens))
 
-    def can_admit(self, prompt_len: int, max_new_tokens: int) -> bool:
-        return self.alloc.can_reserve(self.rows_needed(prompt_len, max_new_tokens))
+    def plan_prefix(self, tokens, prompt_len: int) -> PrefixPlan:
+        """Match a prompt against the radix tree and quantize the hit to the
+        chunk grid (never past ``prompt_len - 1``: the final prompt token is
+        always recomputed so the first emitted token gets real logits)."""
+        m = self.radix.match(tokens[:prompt_len])
+        hit = min(m.tokens, prompt_len - 1)
+        hit = (hit // self.prefix_chunk) * self.prefix_chunk
+        full = hit // self.page
+        shared = m.pages[:full]
+        cow_src = None
+        if hit % self.page:
+            # hit covers part of page `full`; a matched page must exist there
+            cow_src = m.pages[full] if full < len(m.pages) else m.partial
+            assert cow_src is not None, (hit, m.tokens, len(m.pages))
+        return PrefixPlan(hit, shared, cow_src, m.tokens)
 
-    def admit(self, slot: int, prompt_len: int, max_new_tokens: int):
-        self.alloc.reserve(slot, self.rows_needed(prompt_len, max_new_tokens))
+    def can_admit(self, prompt_len: int, max_new_tokens: int,
+                  plan: Optional[PrefixPlan] = None) -> bool:
+        rows = self.rows_needed(prompt_len, max_new_tokens)
+        if plan is None:
+            return self.alloc.can_reserve(rows)
+        new_pins = sum(1 for p in plan.pin_pages if self.alloc.pin_count(p) == 0)
+        return self.alloc.can_reserve(rows, shared_pages=len(plan.shared),
+                                      new_pins=new_pins)
+
+    def admit(self, slot: int, prompt_len: int, max_new_tokens: int,
+              plan: Optional[PrefixPlan] = None) -> int:
+        """Reserve + (under prefix caching) bind/pin the plan's pages.
+        Returns the row the slot's chunked prefill may resume at (0 cold).
+        Pin before the COW allocation so on-demand eviction inside
+        ``cow_bind`` can never free a page this plan depends on."""
+        rows = self.rows_needed(prompt_len, max_new_tokens)
+        if plan is None:
+            self.alloc.reserve(slot, rows)
+            if self.prefix_cache:
+                self.prefix_misses += 1
+            return 0
+        self.alloc.reserve(slot, rows, shared_pages=len(plan.shared))
+        pins = plan.pin_pages
+        for phys in pins:
+            self.alloc.pin_page(phys)
+        self._pins[slot] = pins
+        self.alloc.bind_shared(slot, plan.shared)
+        cow = None
+        if plan.cow_src is not None:
+            dst = self.alloc.cow_bind(slot, plan.cow_src)
+            cow = (plan.cow_src, dst)
+            self.prefix_cow_total += 1
+        self._cow[slot] = cow
+        self._plans[slot] = plan
+        if plan.hit > 0:
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += plan.hit
+            self._emit("prefix_hit", slot=slot, tokens=plan.hit,
+                       shared_pages=len(plan.shared), cow=cow is not None)
+        else:
+            self.prefix_misses += 1
+        return plan.hit
+
+    def prefix_hit(self, slot: int) -> int:
+        """Cached rows the slot's prefill skipped (0 when cold/unshared)."""
+        plan = self._plans.get(slot)
+        return plan.hit if plan is not None else 0
+
+    def cow_moves(self, slot: int) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """One-shot fixed-width (src, dst) vectors for the slot's pending
+        copy-on-write (``apply_page_moves`` layout), or None.  Consumed on
+        first call — the copy runs once, before the first warm chunk."""
+        cow = self._cow.get(slot)
+        if cow is None:
+            return None
+        self._cow[slot] = None
+        src = np.full((self.blocks_per_slot,), SENTINEL, np.int32)
+        dst = np.full((self.blocks_per_slot,), SENTINEL, np.int32)
+        src[0], dst[0] = cow
+        return src, dst
 
     def ensure_rows(self, slot: int, n_rows: int) -> List[Tuple[int, int]]:
         """Guarantee the slot's table covers ``n_rows`` written rows."""
         return self.alloc.ensure(slot, n_rows)
 
+    def donate(self, slot: int, tokens) -> int:
+        """Intern the slot's full prompt pages into the radix tree at the end
+        of prefill (first writer wins).  Returns pages newly cached."""
+        if self.radix is None:
+            return 0
+        prompt_len = len(tokens)
+        full = prompt_len // self.page
+        if full == 0:
+            return 0
+        pages = self.alloc.table(slot)[:full]
+        new = self.radix.insert(tokens[: full * self.page], pages)
+        if new:
+            self._emit("page_share", slot=slot, donated_pages=len(new))
+        return len(new)
+
     def release(self, slot: int):
+        for phys in self._pins.pop(slot, []):
+            self.alloc.unpin_page(phys)
+        self._cow.pop(slot, None)
+        self._plans.pop(slot, None)
         self.alloc.release(slot)
+
+    def _evict_for(self, need: int) -> int:
+        freed = self.radix.evict(need)
+        self._emit("prefix_evict", need=need, freed=freed,
+                   cached_pages=self.radix.cached_pages)
+        return freed
+
+    def _emit(self, kind: str, **fields):
+        if self.event_sink is not None:
+            self.event_sink(kind, **fields)
 
     def plan_compaction(self) -> Tuple[np.ndarray, np.ndarray]:
         """Fixed-width (src, dst) move vectors (identity-padded) for
@@ -146,4 +323,16 @@ class PagedKVManager:
         out[f"{prefix}peak_cache_bytes"] = float(self.peak_cache_bytes())
         out[f"{prefix}pool_cache_bytes"] = float(self.pool_cache_bytes())
         out[f"{prefix}dense_equiv_bytes"] = float(self.dense_equiv_bytes())
+        if self.prefix_cache:
+            lookups = self.prefix_hits + self.prefix_misses
+            out[f"{prefix}prefix_hit_rate"] = (
+                self.prefix_hits / lookups if lookups else 0.0
+            )
+            out[f"{prefix}shared_pages"] = float(self.alloc.shared_pages)
+            out[f"{prefix}prefix_hits_total"] = float(self.prefix_hits)
+            out[f"{prefix}prefix_misses_total"] = float(self.prefix_misses)
+            out[f"{prefix}prefix_hit_tokens_total"] = float(self.prefix_hit_tokens)
+            out[f"{prefix}prefix_cow_total"] = float(self.prefix_cow_total)
+            for k, v in self.radix.metrics(prefix=f"{prefix}radix_").items():
+                out[k] = v
         return out

@@ -335,6 +335,13 @@ class LMService(_ObsAPI):
         self._h_decode = reg.histogram(
             "serve_decode_step_seconds", "one batched decode step wall time"
         )
+        # the histogram is the TTFT source of record for alerting: the scrape
+        # path derives serve_ttft_seconds_p50/_p99 gauges from its buckets
+        # (registry.quantile_gauges), so alert rules read the same stream the
+        # service observes — not a parallel percentile bookkeeping
+        self._h_ttft = reg.histogram(
+            "serve_ttft_seconds", "time to first token (queue + prefill)"
+        )
         n_slots = engine.pool.n_slots
         self.batcher = MicroBatcher(
             BucketPolicy(max_batch=n_slots, max_wait_ms=0.0, max_queue=max_queue)
@@ -461,9 +468,12 @@ class LMService(_ObsAPI):
         tr = _trace_of(slot.future)
         if tr is not None:
             tr.mark_first()
-            self._ttft.append(tr.ttft_s)
+            ttft = tr.ttft_s
         else:
-            self._ttft.append(time.perf_counter() - slot.future.t_submit)
+            ttft = time.perf_counter() - slot.future.t_submit
+        self._ttft.append(ttft)
+        if self.obs.enabled:
+            self._h_ttft.observe(ttft)
         self._feed_probe(hidden_row)
         if slot.emit(self._pick_token(slot, out)):
             self._finish(self.engine.pool.retire(slot.index))
@@ -490,12 +500,14 @@ class LMService(_ObsAPI):
                 break
             r = self._pending.pop(0)
             slot = pool.admit(r.x, r.future)
-            self.engine.admit_slot(slot)
+            hit = self.engine.admit_slot(slot)
             tr = _trace_of(r.future)
             if tr is not None:
-                tr.mark_admit(slot=slot.index, queue_depth=self.batcher.depth())
+                tr.mark_admit(slot=slot.index, queue_depth=self.batcher.depth(),
+                              prefix_hit=hit)
             rec.record("admit", slot=slot.index, prompt_len=r.x.prompt_len,
-                       chunked=slot.prefilling, queue_depth=self.batcher.depth())
+                       chunked=slot.prefilling, prefix_hit=hit,
+                       queue_depth=self.batcher.depth())
             if slot.prefilling:
                 continue  # chunked: first token arrives when the prompt is in
             t0 = time.perf_counter()
@@ -514,6 +526,7 @@ class LMService(_ObsAPI):
             self._emit_first(slot, out, hidden_row)
         chunk_slot = self.engine.prefilling_slot() if self.engine.prefill_chunk else None
         if chunk_slot is not None:
+            before = chunk_slot.prefill_pos
             t0 = time.perf_counter()
             try:
                 res = self.engine.advance_prefill(chunk_slot)
@@ -524,8 +537,16 @@ class LMService(_ObsAPI):
                 if self.obs.enabled:
                     t1 = time.perf_counter()
                     self._h_chunk.observe(t1 - t0)
-                    self.obs.tracer.add_span("prefill_chunk", t0, t1, cat="exec",
-                                             slot=chunk_slot.index)
+                    # offset/wrote/cached make the Chrome trace show per-chunk
+                    # progress: a warm prefix's first span starts at offset ==
+                    # cached > 0 (the skipped rows) instead of 0
+                    cached = (self.engine.pager.prefix_hit(chunk_slot.index)
+                              if self.engine.paged and self.engine.prefix_cache else 0)
+                    self.obs.tracer.add_span(
+                        "prefill_chunk", t0, t1, cat="exec",
+                        slot=chunk_slot.index, offset=before,
+                        wrote=chunk_slot.prefill_pos - before,
+                        prompt_len=chunk_slot.request.prompt_len, cached=cached)
                 if res is not None:
                     self._emit_first(chunk_slot, *res)
         active = pool.decoding_indices()

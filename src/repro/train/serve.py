@@ -216,6 +216,31 @@ def reset_slot_state_paged(pool, slot, bt_row):
     return out
 
 
+def load_template_from_pages(pool, one, bt_row):
+    """Inverse of ``insert_slot_state_paged`` for one slot: gather physical
+    pages ``bt_row`` out of the paged pool into a batch-1 DENSE template tree
+    (attention rows [j * page, (j + 1) * page) read page ``bt_row[j]``).  A
+    warm prefix-cache request seeds its chunked-prefill template this way, so
+    the chunk step attends over the shared prefix's exact KV rows without
+    recomputing them.  Sentinel entries gather scratch-page bytes — callers
+    mask those rows via ``cache_len``, the same contract as padded prefill.
+    Recurrent leaves pass through from ``one`` (prefix caching is
+    attention-only)."""
+    out = {}
+    for name, leafs in pool.items():
+        if _is_paged(leafs):
+            nb = bt_row.shape[0]
+            page = leafs["k_pages"].shape[2]
+            out[name] = {}
+            for key, dst in (("k_pages", "k"), ("v_pages", "v")):
+                rows = leafs[key][:, bt_row]  # (repeats, nb, page, kv, hd)
+                rows = rows.reshape(rows.shape[0], 1, nb * page, *rows.shape[3:])
+                out[name][dst] = rows.astype(one[name][dst].dtype)
+        else:
+            out[name] = one[name]
+    return out
+
+
 def apply_page_moves(pool, src, dst):
     """Copy physical pages ``src[i] -> dst[i]`` across every paged leaf (the
     device half of allocator compaction).  Identity moves (src == dst) are

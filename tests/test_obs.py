@@ -23,6 +23,7 @@ from repro.obs import (
     Profiler,
     Tracer,
     default_serve_rules,
+    quantile_from_buckets,
     reconstruct_request,
     sanitize_name,
 )
@@ -127,6 +128,50 @@ class TestRegistry:
         assert d["a"] == 1.0 and d["b"] == 2.0
         assert d["h_count"] == 1.0 and "h_bucket" not in str(sorted(d))
 
+    def test_quantile_from_buckets_interpolates(self):
+        bounds = (1.0, 2.0, 4.0)
+        # 2 obs in (0,1], 2 in (1,2], none in (2,4], 0 in +Inf
+        counts = (2, 2, 0, 0)
+        # rank q*total from 0 at the holding bucket's LOWER bound
+        assert quantile_from_buckets(bounds, counts, 0.5) == pytest.approx(1.0)
+        assert quantile_from_buckets(bounds, counts, 0.25) == pytest.approx(0.5)
+        assert quantile_from_buckets(bounds, counts, 0.75) == pytest.approx(1.5)
+        assert quantile_from_buckets(bounds, counts, 1.0) == pytest.approx(2.0)
+
+    def test_quantile_from_buckets_edges(self):
+        assert quantile_from_buckets((1.0, 2.0), (0, 0, 0), 0.99) == 0.0  # empty
+        # everything in the +Inf bucket clamps to the top finite bound
+        assert quantile_from_buckets((1.0, 2.0), (0, 0, 5), 0.99) == 2.0
+        with pytest.raises(ValueError, match="quantile"):
+            quantile_from_buckets((1.0,), (1, 0), 1.5)
+
+    def test_histogram_quantile_and_derived_gauges(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("step_s", buckets=(0.1, 1.0, 10.0))
+        for v in (0.05, 0.2, 0.4, 0.9, 20.0):
+            h.observe(v)
+        assert 0.1 < h.quantile(0.5) < 1.0
+        derived = reg.quantile_gauges()
+        assert derived["step_s_p50"] == pytest.approx(h.quantile(0.5))
+        assert derived["step_s_p99"] == 10.0  # +Inf rank clamps to top bound
+        # labelled histograms are skipped (cross-series aggregation is out of
+        # scope), unlabelled non-histograms contribute nothing
+        lab = reg.histogram("lat_s", labelnames=("path",))
+        lab.labels(path="/a").observe(0.3)
+        reg.gauge("depth").set(2)
+        assert set(reg.quantile_gauges()) == {"step_s_p50", "step_s_p99"}
+
+    def test_scrape_derives_quantiles_and_fires_ttft_alert(self):
+        obs = Obs(alerts=AlertManager(default_serve_rules()))
+        h = obs.registry.histogram("serve_ttft_seconds", "ttft")
+        for _ in range(4):
+            h.observe(30.0)  # p99 lands far above the 5s threshold
+        rule = next(r for r in default_serve_rules() if r.name == "ttft_p99_high")
+        for _ in range(rule.window):
+            obs.scrape()
+        assert "ttft_p99_high" in obs.alerts.active()
+        assert obs.registry.value("serve_ttft_seconds_p99") > 5.0
+
 
 # ---------------------------------------------------------------------------
 # Alerts: edge-triggered threshold rules
@@ -198,7 +243,9 @@ class TestAlerts:
         names = {r.metric for r in default_serve_rules()}
         assert "decorr_r_sum_norm_ema" in names
         assert "heartbeat_stale" in names
-        assert "ttft_p99_ms" in names
+        # TTFT alerts read the scrape-derived histogram quantile gauge, not
+        # the service's parallel rolling-window percentile
+        assert "serve_ttft_seconds_p99" in names
         assert "paged_pages_utilization" in names
 
 
