@@ -76,6 +76,13 @@ HARD_GATES = {
          "in-flight probe matches training oracle under page sharing"),
         ("obs.gate.overhead_ok", lambda v: bool(v),
          "always-on telemetry keeps >= 95% of telemetry-off tok/s"),
+        ("perf.gate.has_required", lambda v: bool(v),
+         "attribution covers embed buckets, prefill buckets, decode tick, "
+         "chunked prefill and the probe update"),
+        ("perf.gate.nonzero_samples", lambda v: bool(v),
+         "every attributed executable has nonzero wall-time samples"),
+        ("perf.gate.utilization_ok", lambda v: bool(v),
+         "every attributed executable's roofline utilization is in (0, 1]"),
     ],
     "tune": [],  # per-kernel gates generated below
 }

@@ -26,6 +26,12 @@ from repro.core.losses import DecorrConfig, normalized_bt_regularizer
 from repro.data import SSLDataConfig, ssl_batch
 from repro.decorr import warmup_tune_cache
 from repro.launch.mesh import make_mesh_for_devices
+from repro.launch.obs_args import (
+    add_obs_args,
+    attach_train_step,
+    build_train_obs,
+    finish_train_obs,
+)
 from repro.optim import lars, warmup_cosine
 from repro.train import LoopConfig, create_train_state, run_training
 from repro.train.ssl import (
@@ -58,6 +64,7 @@ def main():
     )
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="model-axis size for --distributed tp")
+    add_obs_args(ap)
     ap.add_argument(
         "--pretune",
         default="analytic",
@@ -141,7 +148,22 @@ def main():
         log_interval=max(args.steps // 15, 1),
         preempt_flag=args.preempt_flag,
     )
-    state = run_training(state, step_fn, batch_fn, lcfg, log_fn=log_fn)
+    obs = build_train_obs(args)
+    monitor = None
+    if obs is not None:
+        from repro.obs import DecorrHealthMonitor
+
+        # probe the projector output of view1 — the matrix the decorrelation
+        # objective acts on — for collapse / relaxation-gap health
+        monitor = DecorrHealthMonitor(lambda params, batch: embed(params, batch["view1"]))
+        attach_train_step(obs, step_fn, state, batch_fn(0))
+    state = run_training(
+        state, step_fn, batch_fn, lcfg, log_fn=log_fn,
+        registry=obs.registry if obs is not None else None,
+        monitor=monitor,
+        perf=obs.perf if obs is not None else None,
+    )
+    finish_train_obs(args, obs)
 
     v1, v2 = ssl_batch(data, 10_000)
     q16 = normalized_bt_regularizer(

@@ -21,6 +21,12 @@ from repro.configs import get_config
 from repro.core.decorrelation import LMDecorrConfig
 from repro.core.losses import DecorrConfig
 from repro.data import LMDataConfig, lm_batch
+from repro.launch.obs_args import (
+    add_obs_args,
+    attach_train_step,
+    build_train_obs,
+    finish_train_obs,
+)
 from repro.models import init_params
 from repro.optim import adamw, warmup_cosine
 from repro.train import LoopConfig, create_train_state, make_train_step, run_training
@@ -47,6 +53,7 @@ def main():
         "the first step is traced (ROADMAP: tune-cache warm-up hook)",
     )
     ap.add_argument("--seed", type=int, default=0)
+    add_obs_args(ap)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -115,8 +122,16 @@ def main():
         print(f"  step {step:5d} loss={m.get('loss', 0):.4f} ce={m.get('ce', 0):.4f} "
               f"decorr={m.get('decorr_aux', 0):.5f} ({time.time()-t0:.1f}s)")
 
-    state = run_training(state, step_fn, batch_fn, lcfg, log_fn=log_fn)
+    obs = build_train_obs(args)
+    if obs is not None:
+        attach_train_step(obs, step_fn, state, batch_fn(0))
+    state = run_training(
+        state, step_fn, batch_fn, lcfg, log_fn=log_fn,
+        registry=obs.registry if obs is not None else None,
+        perf=obs.perf if obs is not None else None,
+    )
     print(f"[train] done at step {int(state.step)} in {time.time()-t0:.1f}s")
+    finish_train_obs(args, obs)
 
 
 if __name__ == "__main__":

@@ -18,8 +18,16 @@ One subsystem, five layers (one module each):
                     recovery), wired to the decorr probe gauges, heartbeat
                     ages, TTFT and page-pool occupancy;
   * ``profiling`` — opt-in ``jax.profiler`` capture behind start/stop;
+  * ``perf``      — per-executable wall-time attribution joined with the
+                    analytic HLO roofline (achieved GFLOP/s and GB/s,
+                    roofline-utilization and analytic-disagreement gauges,
+                    compile-time gauges, compile-cache hit/miss counters);
+  * ``health``    — the train-side decorrelation-health monitor (exact-vs-
+                    relaxed gap, per-feature variance histograms, EMA
+                    collapse indicators) feeding ``default_train_rules``;
   * ``http``      — the stdlib scrape endpoint (``/metrics`` evaluates the
-                    alert rules on every scrape).
+                    alert rules on every scrape; ``/perf`` and ``/flight``
+                    expose executable attribution and the flight recorder).
 
 ``Obs`` bundles all of it; services accept ``obs=`` and default to a fully
 enabled bundle (``Obs.disabled()`` is the telemetry-off bench baseline).
@@ -35,9 +43,16 @@ enabled bundle (``Obs.disabled()`` is the telemetry-off bench baseline).
     obs.recorder.dump_json("flightrec.json")
 """
 
-from repro.obs.alerts import AlertManager, AlertRule, default_serve_rules
+from repro.obs.alerts import (
+    AlertManager,
+    AlertRule,
+    default_serve_rules,
+    default_train_rules,
+)
 from repro.obs.context import Obs
+from repro.obs.health import DecorrHealthMonitor
 from repro.obs.http import MetricsServer
+from repro.obs.perf import ExecTimer
 from repro.obs.profiling import Profiler
 from repro.obs.recorder import FlightRecorder
 from repro.obs.registry import (
@@ -55,6 +70,8 @@ __all__ = [
     "AlertManager",
     "AlertRule",
     "Counter",
+    "DecorrHealthMonitor",
+    "ExecTimer",
     "FlightRecorder",
     "Gauge",
     "Histogram",
@@ -66,6 +83,7 @@ __all__ = [
     "Tracer",
     "default_registry",
     "default_serve_rules",
+    "default_train_rules",
     "quantile_from_buckets",
     "reconstruct_request",
     "sanitize_name",

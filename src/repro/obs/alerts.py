@@ -105,6 +105,9 @@ class AlertManager:
         self.sink = sink
         self._clock = clock
         self.events_total = 0
+        # monotone fire counts already mirrored into a registry Counter, so
+        # publish() can inc by delta (counters reject going backwards)
+        self._published_fired: Dict[str, int] = {}
         for r in rules:
             self.add_rule(r)
 
@@ -202,10 +205,22 @@ class AlertManager:
                                   labelnames=("alert",))
         g_fired = registry.gauge("alert_fired_total", "threshold crossings",
                                  labelnames=("alert",))
+        # a true Counter (not a gauge): firing history survives edge-triggered
+        # clears between scrapes even if the gauge view is reset or sampled
+        # mid-flap — Prometheus rate() needs the monotone series
+        c_fired = registry.counter("obs_alerts_fired_total",
+                                   "cumulative alert firings", labelnames=("rule",))
         for rule in self.rules:
             st = self._state[rule.name]
             g_active.labels(alert=rule.name).set(1.0 if st.active else 0.0)
             g_fired.labels(alert=rule.name).set(float(st.fired))
+            delta = st.fired - self._published_fired.get(rule.name, 0)
+            if delta > 0:
+                c_fired.labels(rule=rule.name).inc(float(delta))
+                self._published_fired[rule.name] = st.fired
+            elif rule.name not in self._published_fired:
+                c_fired.labels(rule=rule.name).inc(0.0)
+                self._published_fired[rule.name] = st.fired
 
 
 def default_serve_rules() -> List[AlertRule]:
@@ -227,4 +242,23 @@ def default_serve_rules() -> List[AlertRule]:
                   window=2, severity="warning"),
         AlertRule("page_pool_pressure", "paged_pages_utilization", ">", 0.95,
                   window=3, severity="warning"),
+    ]
+
+
+def default_train_rules() -> List[AlertRule]:
+    """Decorrelation-health rules for the training loop, matched to the
+    ``train_decorr_*`` gauges :class:`repro.obs.health.DecorrHealthMonitor`
+    publishes.  The relaxation-gap rule watches the FFT relaxation drifting
+    away from the exact off-diagonal objective (the paper's undesirable-
+    minima failure mode); the variance rules watch for feature collapse
+    (Barlow-Twins/VICReg's motivating pathology).  Gap rules only evaluate
+    when the probe affords the exact R_off term — absent metrics leave
+    their rules untouched."""
+    return [
+        AlertRule("train_relaxation_gap_blowup", "train_decorr_relaxation_gap_ema",
+                  ">", 0.5, window=3, severity="warning"),
+        AlertRule("train_variance_collapse", "train_decorr_feat_var_ema", "<", 1e-4,
+                  window=3, severity="critical"),
+        AlertRule("train_feature_mean_drift", "train_decorr_feat_mean_abs_ema",
+                  ">", 1.0, window=3, severity="warning"),
     ]

@@ -20,6 +20,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 from repro.obs.alerts import AlertManager
 from repro.obs.http import MetricsServer
+from repro.obs.perf import ExecTimer
 from repro.obs.profiling import Profiler
 from repro.obs.recorder import FlightRecorder
 from repro.obs.registry import MetricsRegistry
@@ -38,6 +39,7 @@ class Obs:
         recorder: Optional[FlightRecorder] = None,
         alerts: Optional[AlertManager] = None,
         profiler: Optional[Profiler] = None,
+        perf: Optional[ExecTimer] = None,
         dump_dir: Optional[str] = None,
         recorder_capacity: int = 4096,
     ):
@@ -49,6 +51,7 @@ class Obs:
         )
         self.alerts = alerts if alerts is not None else AlertManager()
         self.profiler = profiler if profiler is not None else Profiler()
+        self.perf = perf if perf is not None else ExecTimer(self.registry, enabled=enabled)
         self.dump_dir = dump_dir
         self._dumps = 0
 
@@ -92,6 +95,10 @@ class Obs:
         if derived:
             self.registry.publish(derived)
             m.update(derived)
+        # per-executable roofline gauges (exec_roofline_utilization{...}) are
+        # derived views over the perf stats, refreshed like quantile gauges
+        self.perf.publish(self.registry)
+        m.update(self.perf.metrics())
         self.check_alerts(m)
         return self.registry.exposition()
 
@@ -102,13 +109,16 @@ class Obs:
         host: str = "127.0.0.1",
     ) -> MetricsServer:
         """Serve ``/metrics`` (exposition + alert evaluation), ``/alerts``,
-        ``/healthz`` on a daemon thread; returns the started server (read
-        ``.port`` when asking for an ephemeral one)."""
+        ``/perf`` (executable attribution), ``/flight`` (recent flight-
+        recorder events) and ``/healthz`` on a daemon thread; returns the
+        started server (read ``.port`` when asking for an ephemeral one)."""
         return MetricsServer(
             lambda: self.scrape(metrics_fn),
             alerts_fn=lambda: [
                 {"alert": n, **vars_of(self.alerts.state(n))} for n in self.alerts.active()
             ],
+            perf_fn=self.perf.report,
+            flight_fn=self.recorder.dump,
             host=host,
             port=port,
         ).start()
@@ -121,6 +131,7 @@ class Obs:
         out.update(self.recorder.metrics())
         out.update(self.alerts.metrics())
         out.update(self.profiler.metrics())
+        out.update(self.perf.metrics())
         return out
 
 

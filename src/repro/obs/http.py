@@ -6,6 +6,10 @@ One daemon thread, ``http.server`` only (no new dependencies):
     where services refresh their gauges AND where alert rules are evaluated
     — scrape-path alerting, so an unscrapped process alerts nobody falsely);
   * ``GET /alerts``   -> JSON of currently-active alerts;
+  * ``GET /perf``     -> JSON of the top-k slowest executables with their
+    roofline utilization (``ExecTimer.report``);
+  * ``GET /flight``   -> JSON dump of the flight recorder's recent events
+    (previously only reachable via alert-triggered auto-dump);
   * ``GET /healthz``  -> 200 "ok" liveness.
 
 ``port=0`` binds an ephemeral port (tests; the bound port is on
@@ -30,11 +34,15 @@ class MetricsServer:
         scrape_fn: Callable[[], str],
         *,
         alerts_fn: Optional[Callable[[], list]] = None,
+        perf_fn: Optional[Callable[[], dict]] = None,
+        flight_fn: Optional[Callable[[], dict]] = None,
         host: str = "127.0.0.1",
         port: int = 0,
     ):
         self.scrape_fn = scrape_fn
         self.alerts_fn = alerts_fn
+        self.perf_fn = perf_fn
+        self.flight_fn = flight_fn
         self.host = host
         self.port = int(port)
         self._server: Optional[ThreadingHTTPServer] = None
@@ -65,6 +73,12 @@ class MetricsServer:
                         self._send(200, outer.scrape_fn().encode(), CONTENT_TYPE)
                     elif path == "/alerts" and outer.alerts_fn is not None:
                         body = json.dumps(outer.alerts_fn(), default=float).encode()
+                        self._send(200, body, "application/json")
+                    elif path == "/perf" and outer.perf_fn is not None:
+                        body = json.dumps(outer.perf_fn(), default=float).encode()
+                        self._send(200, body, "application/json")
+                    elif path == "/flight" and outer.flight_fn is not None:
+                        body = json.dumps(outer.flight_fn(), default=float).encode()
                         self._send(200, body, "application/json")
                     elif path == "/healthz":
                         self._send(200, b"ok\n", "text/plain")

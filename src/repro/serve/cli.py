@@ -52,15 +52,19 @@ def _build_obs(args):
 def _finish_obs(args, obs, report_metrics) -> bool:
     """Post-run telemetry outputs: self-scrape the HTTP endpoint
     (``--metrics-port``; asserts every legacy ``metrics()`` key survived into
-    the exposition) and dump the Chrome trace (``--trace-out``)."""
+    the exposition), dump the Chrome trace (``--trace-out``), the metrics
+    exposition text (``--metrics-out``) and the flight recorder
+    (``--flight-out``)."""
     from repro.obs.registry import sanitize_name
 
     ok = True
+    exposition = None
     if args.metrics_port is not None:
         import urllib.request
 
         server = obs.start_server(port=args.metrics_port)
         text = urllib.request.urlopen(f"{server.url}/metrics", timeout=10).read().decode()
+        exposition = text
         exposed = {
             line.split("{")[0].split(" ")[0]
             for line in text.splitlines()
@@ -75,9 +79,27 @@ def _finish_obs(args, obs, report_metrics) -> bool:
             print(f"[obs] MISSING from exposition: {missing[:8]}")
             ok = False
         server.stop()
+    top = obs.perf.snapshot(top_k=3)
+    if top:
+        slowest = ", ".join(
+            f"{r['executable']} ({r['calls']}x, {r['total_s']:.3f}s"
+            + (f", util={r['roofline_utilization']:.3g}" if "roofline_utilization" in r else "")
+            + ")"
+            for r in top
+        )
+        print(f"[obs] slowest executables: {slowest}")
     if args.trace_out:
         obs.tracer.write(args.trace_out)
         print(f"[obs] trace: {len(obs.tracer)} events -> {args.trace_out}")
+    if getattr(args, "metrics_out", None):
+        if exposition is None:
+            exposition = obs.scrape()
+        with open(args.metrics_out, "w") as f:
+            f.write(exposition)
+        print(f"[obs] exposition -> {args.metrics_out}")
+    if getattr(args, "flight_out", None):
+        obs.recorder.dump_json(args.flight_out)
+        print(f"[obs] flight recorder: {len(obs.recorder)} events -> {args.flight_out}")
     return ok
 
 
@@ -417,6 +439,11 @@ def main(argv=None) -> int:
                         "metrics() key is missing from the exposition")
     p.add_argument("--trace-out", default=None,
                    help="write the Chrome trace_event JSON of the run here")
+    p.add_argument("--metrics-out", default=None,
+                   help="write the final Prometheus exposition text here "
+                        "(CI failure artifact)")
+    p.add_argument("--flight-out", default=None,
+                   help="write the flight recorder's event ring as JSON here")
     p.add_argument("--profile-dir", default=None,
                    help="capture a jax.profiler trace of the run into this dir")
     p.add_argument("--alerts", default=None,

@@ -60,6 +60,9 @@ class ServeEngine:
                     f"the {data_axis!r} mesh axis ({dp}) so every bucket shards evenly"
                 )
         self._compiled: Dict[int, callable] = {}
+        # per-executable attribution; services attach obs.perf (None keeps
+        # encode() fully async — no block_until_ready on the hot path)
+        self.perf = None
 
     # -- construction -------------------------------------------------------
 
@@ -105,7 +108,11 @@ class ServeEngine:
     def _embed_fn(self, bucket: int):
         fn = self._compiled.get(bucket)
         if fn is not None:
+            if self.perf is not None:
+                self.perf.cache_hit(f"embed_b{bucket}")
             return fn
+        if self.perf is not None:
+            self.perf.cache_miss(f"embed_b{bucket}")
         if self.mesh is None:
             fn = jax.jit(embed)
         else:
@@ -121,10 +128,18 @@ class ServeEngine:
 
     def warmup(self) -> Tuple[int, ...]:
         """Pre-compile every bucket (AOT) so no request pays a trace."""
+        import time as _time
+
         for b in bucket_sizes(self.policy):
             shape = jax.ShapeDtypeStruct((b, self.model_cfg.input_dim), self.dtype)
             fn = self._embed_fn(b)
-            self._compiled[b] = fn.lower(self.params, shape).compile()
+            t0 = _time.perf_counter()
+            compiled = fn.lower(self.params, shape).compile()
+            self._compiled[b] = compiled
+            if self.perf is not None:
+                name = f"embed_b{b}"
+                self.perf.record_compile(name, _time.perf_counter() - t0)
+                self.perf.attach_compiled(name, compiled)
         return bucket_sizes(self.policy)
 
     def compiled_buckets(self) -> Tuple[int, ...]:
@@ -153,7 +168,15 @@ class ServeEngine:
         b = bucket_for(n, self.policy)
         if n < b:
             x = jnp.concatenate([x, jnp.zeros((b - n, x.shape[1]), self.dtype)], axis=0)
-        z = self._embed_fn(b)(self.params, x)
+        fn = self._embed_fn(b)
+        if self.perf is None:
+            return fn(self.params, x)[:n]
+        # attribution path: block so the wall time covers device execution
+        # (the default perf=None path stays fully async)
+        t0 = self.perf.start()
+        z = fn(self.params, x)
+        jax.block_until_ready(z)
+        self.perf.observe(f"embed_b{b}", self.perf.elapsed(t0))
         return z[:n]
 
 
@@ -300,6 +323,10 @@ class ContinuousLMEngine:
         # attaches its own so page-table churn lands in the same ring buffer
         # as the scheduler's admit/retire events
         self.recorder = None
+        # per-executable attribution (repro.obs.ExecTimer); the service
+        # attaches obs.perf when telemetry is enabled
+        self.perf = None
+        self._warmed_prefill: set = set()
 
         self.paged = bool(paged)
         self.prefix_cache = bool(prefix_cache)
@@ -500,7 +527,15 @@ class ContinuousLMEngine:
             buckets = tuple(sorted(set(int(n) for n in prompt_lens or ())) or (1,))
         for length in buckets:
             toks = jnp.zeros((1, length), jnp.int32)
+            if self.perf is not None:
+                # AOT lower purely for attribution (HLO costs + compile
+                # gauge); the executing jit cache below is untouched
+                self.perf.attach_jit(
+                    f"prefill_b{length}", self._prefill,
+                    self.params, self._caches1, toks, np.int32(1),
+                )
             _, _, one = self._prefill(self.params, self._caches1, toks, np.int32(1))
+            self._warmed_prefill.add(int(length))
         nb = 0 if not self.paged else self.pager.blocks_per_slot
         if self.paged:
             # all-sentinel table rows: warmup writes land on the scratch page
@@ -512,6 +547,10 @@ class ContinuousLMEngine:
         toks = jnp.zeros((self.pool.n_slots,), jnp.int32)
         if self.paged:
             bt = jnp.zeros((self.pool.n_slots, nb), jnp.int32)
+            if self.perf is not None:
+                self.perf.attach_jit(
+                    "decode_step", self._decode, self.params, self.caches, lens, toks, bt
+                )
             _, _, self.caches = self._decode(self.params, self.caches, lens, toks, bt)
             self.caches = self._reset(self.caches, np.int32(0), bt_row)
             if self.compact_on_retire or self.prefix_cache:
@@ -522,10 +561,19 @@ class ContinuousLMEngine:
                 # warm-template gather (all-sentinel row reads scratch rows)
                 self._loadtpl(self.caches, self._caches1, bt_row)
         else:
+            if self.perf is not None:
+                self.perf.attach_jit(
+                    "decode_step", self._decode, self.params, self.caches, lens, toks
+                )
             _, _, self.caches = self._decode(self.params, self.caches, lens, toks)
             self.caches = self._reset(self.caches, np.int32(0))
         if self.prefill_chunk is not None:
             ctoks = jnp.zeros((1, self.prefill_chunk), jnp.int32)
+            if self.perf is not None:
+                self.perf.attach_jit(
+                    "chunk_prefill", self._chunk_step,
+                    self.params, self._caches1, ctoks, np.int32(0), np.int32(0),
+                )
             self._chunk_step(self.params, self._caches1, ctoks, np.int32(0), np.int32(0))
         return buckets
 
@@ -598,13 +646,25 @@ class ContinuousLMEngine:
         req = slot.request
         n = req.prompt_len
         length = self._prompt_bucket(n)
+        perf = self.perf
+        if perf is not None:
+            name = f"prefill_b{length}"
+            if int(length) in self._warmed_prefill:
+                perf.cache_hit(name)
+            else:
+                perf.cache_miss(name)
+                self._warmed_prefill.add(int(length))
+            t0 = perf.start()
         padded = np.zeros((1, length), np.int32)
         padded[0, :n] = np.asarray(req.tokens, np.int32)
         out, hidden, one = self._prefill(
             self.params, self._caches1, jnp.asarray(padded), np.int32(n)
         )
         self._scatter_insert(slot, one)
-        return self._first_output(out, hidden)
+        result = self._first_output(out, hidden)  # np.asarray syncs the device
+        if perf is not None:
+            perf.observe(f"prefill_b{length}", perf.elapsed(t0))
+        return result
 
     def advance_prefill(self, slot):
         """Run ONE chunk of the slot's incremental prefill.  Returns None
@@ -641,6 +701,8 @@ class ContinuousLMEngine:
             self._chunk_live = [slot.index, tree]
         if self._chunk_live[0] != slot.index:
             return None  # another prompt owns the work tree this tick
+        perf = self.perf
+        t0 = perf.start() if perf is not None else 0.0
         off = slot.prefill_pos
         take = min(c, n - off)
         padded = np.zeros((1, c), np.int32)
@@ -652,10 +714,16 @@ class ContinuousLMEngine:
         self._chunk_live[1] = tree
         slot.prefill_pos = off + take
         if slot.prefilling:
+            if perf is not None:
+                jax.block_until_ready(tree)  # mid-prompt chunks return no host value
+                perf.observe("chunk_prefill", perf.elapsed(t0))
             return None
         self._scatter_insert(slot, tree)
         self._chunk_live = None
-        return self._first_output(out, hidden)
+        result = self._first_output(out, hidden)
+        if perf is not None:
+            perf.observe("chunk_prefill", perf.elapsed(t0))
+        return result
 
     def prefilling_slot(self):
         """The still-prefilling slot whose chunk should advance this tick:
@@ -674,6 +742,8 @@ class ContinuousLMEngine:
         slot — (N,) token ids, or (N, V) logits under ``sampling`` — and
         hidden rows (N, d_model)); free-slot and still-prefilling lanes are
         garbage the caller must mask by ``pool.decoding_indices()``."""
+        perf = self.perf
+        t0 = perf.start() if perf is not None else 0.0
         lens = jnp.asarray(self.pool.cache_lens())
         toks = jnp.asarray(self.pool.last_tokens())
         if self.paged:
@@ -700,7 +770,10 @@ class ContinuousLMEngine:
             out, hidden, self.caches = self._decode(self.params, self.caches, lens, toks, bt)
         else:
             out, hidden, self.caches = self._decode(self.params, self.caches, lens, toks)
-        return np.asarray(out), np.asarray(hidden, np.float32)
+        result = (np.asarray(out), np.asarray(hidden, np.float32))  # host sync
+        if perf is not None:
+            perf.observe("decode_step", perf.elapsed(t0))
+        return result
 
     def abort_slot(self, index: int):
         """Host-side-only cleanup for a slot whose device step failed: drop

@@ -59,6 +59,9 @@ class DecorrProbe:
             functools.partial(probe_metrics, cfg=cfg, include_off=include_off)
         )
         self._moments = jax.jit(lambda z: (jnp.mean(z, axis=0), jnp.mean(z * z, axis=0)))
+        # per-executable attribution (repro.obs.ExecTimer); services attach
+        # obs.perf when telemetry is enabled
+        self.perf = None
 
     # -- streaming update ---------------------------------------------------
 
@@ -67,12 +70,15 @@ class DecorrProbe:
         # same key construction as training (see core/permutation.py): the
         # engine samples the permutation itself from this step-folded key.
         perm_key = jax.random.fold_in(self._seed_key, jnp.uint32(self._step))
+        t0 = self.perf.start() if self.perf is not None else 0.0
         vals = self._probe(z1, z2, perm_key=perm_key)
         m1, m2 = self._moments(jnp.asarray(z1, jnp.float32))
 
         # one host transfer for everything; EMAs fold in numpy so the stream
         # update costs no further device dispatches.
         vals, m1, m2 = jax.device_get((vals, m1, m2))
+        if self.perf is not None:  # device_get above is the sync point
+            self.perf.observe("probe_update", self.perf.elapsed(t0))
         batch = {k: float(v) for k, v in vals.items()}
         a = self.ema
         for k, v in batch.items():
@@ -89,6 +95,8 @@ class DecorrProbe:
         n = self.sample_rows or 8
         zero = jnp.zeros((n, d), jnp.float32)
         key = jax.random.fold_in(self._seed_key, jnp.uint32(0))
+        if self.perf is not None:
+            self.perf.attach_jit("probe_update", self._probe, zero, None, perm_key=key)
         jax.block_until_ready(self._probe(zero, None, perm_key=key))
         jax.block_until_ready(self._moments(zero))
 

@@ -135,12 +135,17 @@ class EmbeddingService(_ObsAPI):
     ):
         self.engine = engine
         self.obs = obs or Obs()
+        # executable attribution stays off (perf=None) when telemetry is
+        # disabled so the hot path never pays an extra device sync
+        engine.perf = self.obs.perf if self.obs.perf.enabled else None
         self._h_encode = self.obs.registry.histogram(
             "serve_encode_seconds", "embedding batch encode wall time"
         )
         self.policy = (policy or engine.policy).validate()
         self.batcher = MicroBatcher(self.policy)
         self.probe = probe
+        if probe is not None:
+            probe.perf = engine.perf
         if probe is not None and probe.sample_rows is None:
             # pin the probe to one compiled shape: the largest bucket
             from repro.serve.buckets import bucket_sizes
@@ -325,6 +330,11 @@ class LMService(_ObsAPI):
         self.obs = obs or Obs()
         # the engine narrates page-table activity into the same ring buffer
         engine.recorder = self.obs.recorder
+        # executable attribution stays off (perf=None) when telemetry is
+        # disabled so the decode tick keeps its current sync profile
+        engine.perf = self.obs.perf if self.obs.perf.enabled else None
+        if probe is not None:
+            probe.perf = engine.perf
         reg = self.obs.registry
         self._h_prefill = reg.histogram(
             "serve_prefill_seconds", "whole-prompt insert wall time"

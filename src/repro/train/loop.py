@@ -13,6 +13,7 @@ What it adds is the operational envelope a 1000-node run needs:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, Optional
 
 
@@ -40,13 +41,21 @@ def run_training(
     log_fn: Callable[[int, Dict], None] = None,
     fault_hook: Optional[Callable[[int], None]] = None,
     registry=None,
+    monitor=None,
+    perf=None,
 ) -> TrainState:
     """batch_fn(step) -> device-ready batch (deterministic per step).
     fault_hook(step) may raise RuntimeError to simulate transient faults.
-    ``registry`` (an ``repro.obs.MetricsRegistry``) gets a per-step wall-time
-    histogram + step counter every step, and ``train_``-prefixed gauges of
-    the training metrics at each log interval (where they are already
-    host-synced — never on the hot path)."""
+    ``registry`` (an ``repro.obs.MetricsRegistry``) gets per-phase wall-time
+    histograms (batch fetch / train step / log-interval publish) + a step
+    counter every step, and ``train_``-prefixed gauges of the training
+    metrics plus a global param-norm gauge at each log interval (where they
+    are already host-synced — never on the hot path).
+    ``monitor`` (an ``repro.obs.DecorrHealthMonitor``) probes the current
+    params against the step's batch at each log interval, publishing the
+    ``train_decorr_*`` health gauges its alert rules read.
+    ``perf`` (an ``repro.obs.ExecTimer``) attributes the train-step
+    executable's wall time per invocation."""
     mgr = (
         CheckpointManager(cfg.ckpt_dir, interval=cfg.ckpt_interval, keep=cfg.ckpt_keep)
         if cfg.ckpt_dir
@@ -54,10 +63,14 @@ def run_training(
     )
     preempt = PreemptionSignal(cfg.preempt_flag) if cfg.preempt_flag else None
     watchdog = StragglerWatchdog()
-    h_step = c_steps = None
+    h_step = c_steps = h_batch = h_publish = None
     if registry is not None:
         h_step = registry.histogram("train_step_seconds", "one train step wall time")
         c_steps = registry.counter("train_steps_total", "train steps run")
+        h_batch = registry.histogram("train_batch_seconds", "batch fetch wall time")
+        h_publish = registry.histogram(
+            "train_publish_seconds", "log-interval publish + health-probe wall time"
+        )
 
     # auto-resume
     start_step = int(state.step)
@@ -67,11 +80,21 @@ def run_training(
             state = restored
             start_step = step
 
+    # phase timings land in a cell so one_step keeps the (state, metrics)
+    # return contract with_retries wraps
+    phase = {"batch_s": 0.0, "step_s": 0.0}
+
     def one_step(step: int, state: TrainState):
         if fault_hook is not None:
             fault_hook(step)
+        t0 = time.perf_counter()
         batch = batch_fn(step)
-        return train_step(state, batch)
+        t1 = time.perf_counter()
+        out = train_step(state, batch)
+        t2 = time.perf_counter()
+        phase["batch_s"] = t1 - t0
+        phase["step_s"] = t2 - t1
+        return out
 
     step_with_retry = with_retries(one_step, max_retries=cfg.max_step_retries)
 
@@ -82,9 +105,14 @@ def run_training(
         watchdog.step_end()
         if registry is not None:
             h_step.observe(watchdog.durations[-1])
+            h_batch.observe(phase["batch_s"])
             c_steps.inc()
+        if perf is not None:
+            perf.observe("train_step", phase["step_s"])
 
-        if (step + 1) % cfg.log_interval == 0 and (log_fn is not None or registry is not None):
+        at_log = (step + 1) % cfg.log_interval == 0
+        if at_log and (log_fn is not None or registry is not None or monitor is not None):
+            t_pub = time.perf_counter()
             host_metrics = {k: float(v) for k, v in metrics.items()}
             host_metrics["stragglers"] = watchdog.straggler_events
             if registry is not None:
@@ -92,8 +120,13 @@ def run_training(
                     {f"train_{k}": v for k, v in host_metrics.items()}
                 )
                 registry.gauge("train_step_seconds_median").set(watchdog.median)
+                _publish_param_norm(registry, state)
+            if monitor is not None:
+                monitor.update(state, batch_fn(step), step=step + 1, registry=registry)
             if log_fn is not None:
                 log_fn(step + 1, host_metrics)
+            if h_publish is not None:
+                h_publish.observe(time.perf_counter() - t_pub)
 
         if mgr is not None:
             mgr.save(int(state.step), state)
@@ -108,3 +141,22 @@ def run_training(
         mgr.save(int(state.step), state, force=True)
         mgr.wait()
     return state
+
+
+def _publish_param_norm(registry, state):
+    """Global L2 norm of the params as a gauge.  Tolerant of duck-typed
+    states (tests pass step-only stand-ins) — publishes nothing then."""
+    params = getattr(state, "params", None)
+    if params is None:
+        return
+    try:
+        import jax
+        import jax.numpy as jnp
+
+        leaves = jax.tree_util.tree_leaves(params)
+        if not leaves:
+            return
+        sq = sum(float(jnp.vdot(x, x).real) for x in leaves)
+        registry.gauge("train_param_norm", "global L2 norm of the params").set(sq ** 0.5)
+    except Exception:
+        return

@@ -17,12 +17,14 @@ import pytest
 from repro.obs import (
     AlertManager,
     AlertRule,
+    ExecTimer,
     FlightRecorder,
     MetricsRegistry,
     Obs,
     Profiler,
     Tracer,
     default_serve_rules,
+    default_train_rules,
     quantile_from_buckets,
     reconstruct_request,
     sanitize_name,
@@ -144,6 +146,34 @@ class TestRegistry:
         assert quantile_from_buckets((1.0, 2.0), (0, 0, 5), 0.99) == 2.0
         with pytest.raises(ValueError, match="quantile"):
             quantile_from_buckets((1.0,), (1, 0), 1.5)
+        with pytest.raises(ValueError, match="quantile"):
+            quantile_from_buckets((1.0,), (1, 0), -0.1)
+
+    def test_quantile_from_buckets_single_bucket(self):
+        # one finite bucket holding all the mass: every quantile interpolates
+        # within (0, bound]
+        assert quantile_from_buckets((2.0,), (4, 0), 0.0) == pytest.approx(0.0)
+        assert quantile_from_buckets((2.0,), (4, 0), 0.5) == pytest.approx(1.0)
+        assert quantile_from_buckets((2.0,), (4, 0), 1.0) == pytest.approx(2.0)
+        # a single observation degenerates to the bucket's upper bound at q=1
+        assert quantile_from_buckets((2.0,), (1, 0), 1.0) == pytest.approx(2.0)
+
+    def test_label_cardinality_overflow_keeps_existing_children(self):
+        reg = MetricsRegistry(max_label_sets=2)
+        c = reg.counter("hits", labelnames=("path",))
+        c.labels(path="/a").inc()
+        c.labels(path="/b").inc(2)
+        with pytest.raises(ValueError, match="cardinality"):
+            c.labels(path="/c")
+        # the overflow attempt must not corrupt or evict live children
+        c.labels(path="/a").inc()
+        assert reg.value("hits", {"path": "/a"}) == 2.0
+        assert reg.value("hits", {"path": "/b"}) == 2.0
+        text = reg.exposition()
+        assert 'hits{path="/a"} 2' in text and 'hits{path="/c"}' not in text
+        # and a second overflow attempt still raises (no partial registration)
+        with pytest.raises(ValueError, match="cardinality"):
+            c.labels(path="/c")
 
     def test_histogram_quantile_and_derived_gauges(self):
         reg = MetricsRegistry()
@@ -238,6 +268,30 @@ class TestAlerts:
         assert reg.value("alert_active", {"alert": "drift"}) == 1.0
         assert reg.value("alert_fired_total", {"alert": "drift"}) == 1.0
         assert reg.value("alerts_active") == 1.0
+
+    def test_fired_counter_survives_clears_between_scrapes(self):
+        reg = MetricsRegistry()
+        am = AlertManager([AlertRule("flap", "m", ">", 1.0)])
+        am.publish(reg)  # zero-valued series exists before any firing
+        assert reg.value("obs_alerts_fired_total", {"rule": "flap"}) == 0.0
+        for _ in range(3):  # three full fire/clear flaps
+            am.evaluate({"m": 5.0})
+            am.evaluate({"m": 0.0})
+        am.publish(reg)
+        # the gauge view says "not active" but the counter keeps the history
+        assert reg.value("alert_active", {"alert": "flap"}) == 0.0
+        assert reg.value("obs_alerts_fired_total", {"rule": "flap"}) == 3.0
+        am.publish(reg)  # republish without new firings must not double-count
+        assert reg.value("obs_alerts_fired_total", {"rule": "flap"}) == 3.0
+
+    def test_default_train_rules_target_health_gauges(self):
+        rules = {r.name: r for r in default_train_rules()}
+        assert rules["train_variance_collapse"].metric == "train_decorr_feat_var_ema"
+        assert rules["train_variance_collapse"].severity == "critical"
+        assert (rules["train_relaxation_gap_blowup"].metric
+                == "train_decorr_relaxation_gap_ema")
+        for r in rules.values():
+            r.validate()
 
     def test_default_serve_rules_target_live_gauges(self):
         names = {r.metric for r in default_serve_rules()}
@@ -380,6 +434,224 @@ class TestObsBundle:
         assert p.start() is False and p.stop() is None
         assert p.metrics()["profiler_active"] == 0.0
 
+    def test_perf_and_flight_endpoints(self):
+        obs = Obs()
+        obs.perf.attach_analysis("decode", flops=2e9, hbm_bytes=1e8)
+        obs.perf.observe("decode", 0.004)
+        obs.perf.observe("decode", 0.002)
+        obs.recorder.record("admit", slot=1)
+        server = obs.start_server(port=0)
+        try:
+            base = server.url
+            perf = json.loads(urllib.request.urlopen(base + "/perf", timeout=10).read())
+            assert perf["executables"] == 1 and perf["observed_total"] == 2
+            row = perf["top"][0]
+            assert row["executable"] == "decode" and row["calls"] == 2
+            assert 0.0 < row["roofline_utilization"] <= 1.0
+            assert row["best_s"] == pytest.approx(0.002)
+            flight = json.loads(urllib.request.urlopen(base + "/flight", timeout=10).read())
+            assert flight["recorded_total"] == 1
+            assert flight["events"][0]["kind"] == "admit"
+            # the scrape path mirrors the roofline join as labelled gauges
+            urllib.request.urlopen(base + "/metrics", timeout=10).read()
+            assert obs.registry.value(
+                "exec_roofline_utilization", {"executable": "decode"}
+            ) == pytest.approx(row["roofline_utilization"])
+        finally:
+            server.stop()
+
+
+# ---------------------------------------------------------------------------
+# ExecTimer: per-executable attribution + the analytic roofline join
+# ---------------------------------------------------------------------------
+
+
+class TestExecTimer:
+    def test_observe_tracks_calls_total_best(self):
+        t = ExecTimer()
+        for s in (0.03, 0.01, 0.02):
+            t.observe("step", s)
+        (row,) = t.snapshot()
+        assert row["calls"] == 3
+        assert row["total_s"] == pytest.approx(0.06)
+        assert row["best_s"] == pytest.approx(0.01)
+        assert row["mean_s"] == pytest.approx(0.02)
+        assert "roofline_utilization" not in row  # no analysis attached yet
+        assert t.registry.get("exec_seconds").labels(executable="step").count == 3
+
+    def test_analysis_join_derives_roofline_fields(self):
+        t = ExecTimer()
+        t.attach_analysis("step", flops=1e9, hbm_bytes=4e6, compile_s=0.5)
+        t.observe("step", 1e-3)
+        (row,) = t.snapshot()
+        # achieved rates come from the BEST measured time
+        assert row["achieved_gflops"] == pytest.approx(1e9 / 1e-3 / 1e9)
+        assert row["achieved_gbps"] == pytest.approx(4e6 / 1e-3 / 1e9)
+        assert 0.0 < row["roofline_utilization"] <= 1.0
+        # measured/analytic disagreement: CPU-measured vs TPU-analytic >> 1
+        assert row["disagreement"] == pytest.approx(
+            1e-3 / row["bound_s"]
+        )
+        assert row["compile_s"] == 0.5
+        assert row["dominant"] in ("compute", "memory", "collective")
+
+    def test_utilization_clamps_to_one(self):
+        t = ExecTimer()
+        # analytic bound far ABOVE the measured time (pessimistic model):
+        # the gauge clamps at 1.0 instead of reporting >100% of roofline
+        t.attach_analysis("fast", flops=0.0, hbm_bytes=0.0, bound_s=10.0)
+        t.observe("fast", 1e-3)
+        (row,) = t.snapshot()
+        assert row["roofline_utilization"] == 1.0
+
+    def test_snapshot_sorts_by_total_and_top_k(self):
+        t = ExecTimer()
+        t.observe("minor", 0.001)
+        for _ in range(5):
+            t.observe("major", 0.1)
+        rows = t.snapshot()
+        assert [r["executable"] for r in rows] == ["major", "minor"]
+        assert [r["executable"] for r in t.snapshot(top_k=1)] == ["major"]
+        rep = t.report(top_k=1)
+        assert rep["executables"] == 2 and len(rep["top"]) == 1
+
+    def test_publish_emits_labelled_gauges(self):
+        reg = MetricsRegistry()
+        t = ExecTimer(reg)
+        t.attach_analysis("step", flops=1e9, hbm_bytes=1e6)
+        t.observe("step", 0.01)
+        t.publish()
+        lbl = {"executable": "step"}
+        assert reg.value("exec_wall_seconds_total", lbl) == pytest.approx(0.01)
+        assert reg.value("exec_calls_total", lbl) == 1.0
+        assert 0.0 < reg.value("exec_roofline_utilization", lbl) <= 1.0
+        assert reg.value("exec_analytic_disagreement", lbl) > 1.0
+
+    def test_cache_hit_miss_counters(self):
+        t = ExecTimer()
+        t.cache_miss("embed_b32")
+        t.cache_hit("embed_b32")
+        t.cache_hit("embed_b32")
+        assert t.registry.value(
+            "exec_cache_hits_total", {"executable": "embed_b32"}) == 2.0
+        assert t.registry.value(
+            "exec_cache_misses_total", {"executable": "embed_b32"}) == 1.0
+
+    def test_disabled_timer_is_inert(self):
+        t = ExecTimer(enabled=False)
+        t.observe("x", 1.0)
+        t.cache_hit("x")
+        t.attach_analysis("x", flops=1.0, hbm_bytes=1.0)
+        assert t.snapshot() == [] and t.analyzed == 0
+        assert t.metrics()["perf_observed_total"] == 0.0
+
+    def test_attach_jit_parses_real_hlo(self):
+        import jax
+        import jax.numpy as jnp
+
+        fn = jax.jit(lambda a, b: a @ b)
+        x = jnp.ones((32, 32), jnp.float32)
+        t = ExecTimer()
+        assert t.attach_jit("matmul", fn, x, x)
+        t.observe("matmul", 1e-3)
+        (row,) = t.snapshot()
+        assert row["flops"] > 0 and row["bound_s"] > 0
+        assert 0.0 < row["roofline_utilization"] <= 1.0
+        assert row["compile_s"] > 0  # the AOT lower+compile was timed
+        # idempotent: re-attaching the same name is a no-op that reports True
+        assert t.attach_jit("matmul", fn, x, x)
+
+    def test_attach_compiled_tolerates_bad_backends(self):
+        class NoText:
+            def as_text(self):
+                raise RuntimeError("no HLO here")
+
+        t = ExecTimer()
+        assert t.attach_compiled("weird", NoText()) is False
+        assert t.analyzed == 0
+
+
+# ---------------------------------------------------------------------------
+# DecorrHealthMonitor: the train-side collapse watchdog
+# ---------------------------------------------------------------------------
+
+
+class TestDecorrHealthMonitor:
+    def _monitor(self, **kw):
+        from repro.obs import DecorrHealthMonitor
+
+        # ema=0 -> every indicator tracks the latest batch exactly, so a
+        # synthetic collapse registers on the first observation
+        kw.setdefault("ema", 0.0)
+        return DecorrHealthMonitor(**kw)
+
+    def test_healthy_stream_reports_unit_variance(self):
+        mon = self._monitor()
+        rng = np.random.default_rng(0)
+        m = mon.observe(rng.standard_normal((64, 16)).astype(np.float32))
+        assert m["train_decorr_feat_var_ema"] > 0.5
+        assert m["train_decorr_collapsed_frac"] == 0.0
+        assert "train_decorr_relaxation_gap" in m  # d=16 affords exact R_off
+        assert m["train_decorr_updates"] == 1.0
+
+    def test_collapse_indicators_and_histogram(self):
+        reg = MetricsRegistry()
+        mon = self._monitor()
+        z = np.ones((32, 16), np.float32)  # zero-variance features: collapse
+        m = mon.observe(z, registry=reg)
+        assert m["train_decorr_feat_var_ema"] < 1e-6
+        assert m["train_decorr_collapsed_frac"] == 1.0
+        assert m["train_decorr_feat_var_min_ema"] < 1e-6
+        h = reg.get("train_feat_var")
+        assert h.count == 16  # one sample per feature
+        assert reg.value("train_decorr_feat_var_ema") == pytest.approx(
+            m["train_decorr_feat_var_ema"], abs=1e-9
+        )
+
+    def test_update_embeds_with_params(self):
+        mon = self._monitor(embed_fn=lambda params, batch: batch * params)
+
+        class State:
+            params = 2.0
+
+        rng = np.random.default_rng(1)
+        m = mon.update(State(), rng.standard_normal((16, 8)).astype(np.float32), step=5)
+        assert m["train_decorr_step"] == 5.0 and mon.updates == 1
+        with pytest.raises(ValueError, match="embed_fn"):
+            self._monitor().update(State(), np.ones((4, 4), np.float32))
+
+    def test_variance_collapse_alert_fires_once_and_clears(self):
+        """The acceptance scenario: a synthetic variance-collapse training
+        stream fires train_variance_collapse exactly once (edge-triggered,
+        window=3) and clears on recovery."""
+        obs = Obs(alerts=AlertManager(default_train_rules()))
+        mon = self._monitor()
+        fired = []
+        obs.alerts.sink = fired.append
+        rule = next(r for r in default_train_rules()
+                    if r.name == "train_variance_collapse")
+        # constant features: zero variance (collapse) but modest mean, so the
+        # mean-drift rule stays quiet and exactly one rule breaches
+        collapsed = np.full((32, 16), 0.25, np.float32)
+        for _ in range(rule.window + 1):  # extra scrape must NOT refire
+            mon.observe(collapsed, registry=obs.registry)
+            obs.scrape()
+        assert [e["type"] for e in fired] == ["fire"]
+        assert fired[0]["alert"] == "train_variance_collapse"
+        assert fired[0]["severity"] == "critical"
+        assert obs.registry.value(
+            "obs_alerts_fired_total", {"rule": "train_variance_collapse"}) == 1.0
+        # recovery: healthy unit-variance embeddings clear the alert
+        rng = np.random.default_rng(2)
+        mon.observe(rng.standard_normal((32, 16)).astype(np.float32),
+                    registry=obs.registry)
+        obs.scrape()
+        assert [e["type"] for e in fired] == ["fire", "clear"]
+        assert obs.alerts.active() == []
+        # the firing history survives the clear
+        assert obs.registry.value(
+            "obs_alerts_fired_total", {"rule": "train_variance_collapse"}) == 1.0
+
 
 # ---------------------------------------------------------------------------
 # Train-loop registry integration (no model needed: duck-typed state)
@@ -404,6 +676,42 @@ def test_train_loop_publishes_registry():
     assert reg.value("train_loss") == 0.25
     assert reg.value("train_stragglers") == 0.0
     assert reg.value("train_step_seconds_median") > 0.0
+
+
+def test_train_loop_phase_timing_perf_and_monitor():
+    from repro.obs import DecorrHealthMonitor
+    from repro.train.loop import LoopConfig, run_training
+
+    class State:
+        step = 0
+
+    def train_step(state, batch):
+        state.step += 1
+        return state, {"loss": 0.5}
+
+    rng = np.random.default_rng(0)
+
+    def batch_fn(step):
+        return rng.standard_normal((16, 8)).astype(np.float32)
+
+    reg = MetricsRegistry()
+    perf = ExecTimer(reg)
+    # embed_fn ignores the duck-typed state and probes the batch directly
+    monitor = DecorrHealthMonitor(lambda params, batch: batch, ema=0.0)
+    run_training(State(), train_step, batch_fn,
+                 LoopConfig(total_steps=6, log_interval=2),
+                 registry=reg, monitor=monitor, perf=perf)
+    # every step lands in the phase histograms and the perf attribution
+    assert reg.get("train_batch_seconds").count == 6
+    assert reg.get("train_publish_seconds").count == 3  # log steps 2, 4, 6
+    (row,) = [r for r in perf.snapshot() if r["executable"] == "train_step"]
+    assert row["calls"] == 6 and row["total_s"] > 0
+    # the health monitor probed at each log interval and published its gauges
+    assert monitor.updates == 3
+    assert reg.value("train_decorr_updates") == 3.0
+    assert reg.value("train_decorr_step") == 6.0
+    assert reg.value("train_decorr_feat_var_ema") > 0.5
+    assert reg.get("train_feat_var").count == 8 * 3  # d observations per probe
 
 
 # ---------------------------------------------------------------------------
@@ -504,10 +812,36 @@ class TestLMServiceObs:
         assert [e["type"] for e in fired] == ["fire", "clear"]
         assert obs.alerts.active() == []
 
+    def test_perf_attribution_joins_serve_executables(self, gemma):
+        obs = Obs()
+        svc = self._service(gemma, obs)
+        assert svc.engine.perf is obs.perf  # service wires the shared timer
+        svc.warmup()
+        self._run(svc, gemma[0])
+        rows = {r["executable"]: r for r in obs.perf.snapshot()}
+        for name in ("decode_step", "prefill_b8"):
+            assert rows[name]["calls"] >= 1, name
+            assert rows[name]["total_s"] > 0, name
+            assert 0.0 < rows[name]["roofline_utilization"] <= 1.0, name
+        # warmup's AOT lower+compile was timed, and the 8-token prompts all
+        # hit the pre-warmed prefill bucket
+        assert rows["prefill_b8"]["compile_s"] > 0
+        assert obs.registry.value(
+            "exec_cache_hits_total", {"executable": "prefill_b8"}) >= 1.0
+        # the scrape path mirrors the same derived values as labelled gauges
+        svc.scrape()
+        assert obs.registry.value(
+            "exec_roofline_utilization", {"executable": "decode_step"}
+        ) == pytest.approx(rows["decode_step"]["roofline_utilization"])
+        assert obs.registry.value(
+            "exec_calls_total", {"executable": "decode_step"}
+        ) == float(rows["decode_step"]["calls"])
+
     def test_disabled_obs_serves_identically(self, gemma):
         on = self._run(self._service(gemma, Obs()), gemma[0], seed=3)
         obs = Obs.disabled()
         svc = self._service(gemma, obs)
+        assert svc.engine.perf is None  # hot path keeps its sync profile
         off = self._run(svc, gemma[0], seed=3)
         for a, b in zip(on, off):
             assert np.array_equal(a.result(timeout=5), b.result(timeout=5))
