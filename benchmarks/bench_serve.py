@@ -3,16 +3,20 @@ micro-batching on the ssl-paper reduced config, (LM path) whole-request
 ``greedy_generate`` vs continuous batching on a mixed-length workload, and
 (paged path) dense vs paged KV cache on a length-SKEWED workload — many
 short requests sharing a pool sized for the rare long one, the fragmentation
-case block tables exist for — and (prefix path) the prefix-sharing radix
+case block tables exist for — (prefix path) the prefix-sharing radix
 cache on a shared-prefix fan-out workload: warm requests resume chunked
-prefill past the cached pages.  Emits ``BENCH_serve.json`` (p50/p99 latency
-+ throughput per policy, probe health, probe-vs-oracle agreement, paged peak
-cache bytes vs the dense pool, warm-vs-cold prefix TTFT + peak pages); CI
+prefill past the cached pages — and (spec path) self-drafting speculative
+decode vs plain paged decode on a decode-heavy workload.  Emits
+``BENCH_serve.json`` (p50/p99 latency + throughput per policy, probe health,
+probe-vs-oracle agreement, paged peak cache bytes vs the dense pool,
+warm-vs-cold prefix TTFT + peak pages, speculative acceptance stats); CI
 gates (``benchmarks/compare.py``) that micro-batched >= naive, continuous >=
 whole-request (identical tokens), paged == dense tokens with strictly
 smaller peak cache bytes, prefix sharing == unshared tokens with strictly
-lower warm TTFT and peak pages, probes match the training-path oracle, and
-no gated ratio regresses >20% against the committed baseline.
+lower warm TTFT and peak pages, speculative == plain tokens at >= plain
+tok/s with more than one accepted token per verify step, probes match the
+training-path oracle, and no gated ratio regresses >20% against the
+committed baseline.
 """
 
 from __future__ import annotations
@@ -54,6 +58,19 @@ PREFIX = dict(
     slots=4,
     page_size=16,
     prefill_chunk=8,
+)
+# speculative decoding: decode-heavy mix (short prompts, long generations) so
+# verify steps dominate and the n-gram drafter has context to look up; greedy
+# from a random-init net falls into repetitive cycles the drafter catches
+SPECDEC = dict(
+    n_requests=32,
+    prompt_lens=(4, 6, 8),
+    new_tokens=(24, 32),
+    slots=8,
+    page_size=16,
+    draft_k=4,
+    ngram_max=3,
+    ngram_min=1,
 )
 
 
@@ -99,6 +116,7 @@ def run():
     lm_report = _run_lm_continuous()
     paged_report = _run_paged()
     prefix_report = _run_prefix()
+    spec_report = _run_spec()
     obs_report = _run_obs_overhead()
     perf_report = _run_perf()
 
@@ -111,6 +129,7 @@ def run():
             "lm": LM,
             "paged": PAGED,
             "prefix": PREFIX,
+            "spec": SPECDEC,
         },
         "naive": report["naive"],
         "microbatch": report["microbatch"],
@@ -122,6 +141,7 @@ def run():
         "lm": lm_report,
         "paged": paged_report,
         "prefix": prefix_report,
+        "spec": spec_report,
         "obs": obs_report,
         "perf": perf_report,
     }
@@ -184,6 +204,22 @@ def run():
         f"peak_pages_ratio={xg['peak_pages_ratio']:.3f};"
         f"token_mismatches={xg['token_mismatches']:.0f};"
         f"probe_oracle_rel_err={xg.get('probe_oracle_rel_err', float('nan')):.2e}",
+    ))
+    for name in ("plain", "speculative"):
+        r = spec_report[name]
+        rows.append(fmt_row(
+            f"serve/spec_{name}", r["p50_ms"] * 1e3,
+            f"p99_ms={r['p99_ms']:.2f};tok_per_s={r['tok_per_s']:.0f}",
+        ))
+    sg = spec_report["gate"]
+    rows.append(fmt_row(
+        "serve/gate_speculative", 0.0,
+        f"ok={sg['spec_beats_plain'] and sg['accepted_tokens_per_step'] > 1};"
+        f"tok_per_s_ratio={sg['tok_per_s_ratio']:.2f};"
+        f"accepted_per_step={sg['accepted_tokens_per_step']:.2f};"
+        f"tokens_per_lane={sg['tokens_per_lane']:.2f};"
+        f"hit_rate={sg['draft_hit_rate']:.2f};"
+        f"token_mismatches={sg['token_mismatches']:.0f}",
     ))
     for name in ("off", "on"):
         r = obs_report[name]
@@ -294,6 +330,34 @@ def _run_prefix():
         prefill_chunk=PREFIX["prefill_chunk"],
         probe_fn=lambda: DecorrProbe(DecorrConfig(style="vic", reg="sum", q=2)),
         record_probe_rows=True,
+    )
+
+
+def _run_spec():
+    """Plain paged vs self-drafting speculative decode on a decode-heavy
+    workload (the acceptance gate: bit-identical greedy tokens, tok/s at
+    least the plain paged run's, and more than one token emitted per verify
+    step — the speculation actually pays for its lane-batched forward)."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve.loadgen import LMLoadConfig, compare_speculative
+
+    cfg = get_config(LM["arch"]).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    load = LMLoadConfig(
+        n_requests=SPECDEC["n_requests"],
+        prompt_lens=SPECDEC["prompt_lens"],
+        new_tokens=SPECDEC["new_tokens"],
+    )
+    return compare_speculative(
+        cfg,
+        params,
+        load,
+        n_slots=SPECDEC["slots"],
+        page_size=SPECDEC["page_size"],
+        draft_k=SPECDEC["draft_k"],
+        spec_ngram_max=SPECDEC["ngram_max"],
+        spec_ngram_min=SPECDEC["ngram_min"],
     )
 
 

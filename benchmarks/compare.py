@@ -74,6 +74,12 @@ HARD_GATES = {
          "the radix cache actually served hits on the fan-out workload"),
         ("prefix.gate.probe_oracle_rel_err", lambda v: v < 1e-3,
          "in-flight probe matches training oracle under page sharing"),
+        ("spec.gate.token_mismatches", lambda v: v == 0,
+         "speculative decode changes no request's greedy tokens"),
+        ("spec.gate.spec_beats_plain", lambda v: bool(v),
+         "speculative tok/s >= plain paged decode on the decode-heavy mix"),
+        ("spec.gate.accepted_tokens_per_step", lambda v: v > 1,
+         "each verify step emits more than one token on average"),
         ("obs.gate.overhead_ok", lambda v: bool(v),
          "always-on telemetry keeps >= 95% of telemetry-off tok/s"),
         ("perf.gate.has_required", lambda v: bool(v),

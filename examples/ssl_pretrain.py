@@ -10,7 +10,7 @@ seconds-scale run.
     PYTHONPATH=src python examples/ssl_pretrain.py \
         --steps 300 --ckpt-dir /tmp/ssl_ckpt          # ~100M params
     # kill it mid-run and re-run: it resumes from the newest checkpoint.
-    # distributed (shard_map over all local devices; see README):
+    # distributed (shard_map over all local devices; see docs/distributed.md):
     PYTHONPATH=src python examples/ssl_pretrain.py --tiny --distributed global
     PYTHONPATH=src python examples/ssl_pretrain.py --tiny --distributed tp \
         --model-parallel 2

@@ -285,6 +285,14 @@ def _paged_decode(q, k, v, cache, cache_len, block_tables, cfg: ArchConfig, spec
     masked positions whose probability mass underflows to exactly 0.  On TPU
     ``repro.tune.best_impl`` routes to the Pallas block-table kernel instead
     (``kernels/paged_attention``), which never materializes the gather.
+
+    The speculative k-token verify (``train.serve.make_verify_step``) runs
+    THROUGH this path unchanged: each draft position is its own batch lane
+    with its own ``cache_len`` and table row.  Because the scatter of every
+    lane's k/v happens before any lane's gather, lane ``j`` of a slot sees
+    the rows lanes ``< j`` just wrote on the shared scratch pages — one
+    forward verifies k + 1 positions with per-lane math identical to this
+    very decode step (the bit-identity anchor).
     """
     from repro.kernels.paged_attention import ops as paged_ops
     from repro.tune.dispatch import best_impl

@@ -263,7 +263,10 @@ def forward(
     if positions is None:
         off = 0
         if cache_len is not None:
-            # scalar (whole-batch) or (B,) per-slot decode positions
+            # scalar (whole-batch) or (B,) per-slot decode positions; the
+            # speculative verify rides the vector form — lane (slot, j)
+            # passes cache_len = pos + j and gets RoPE position pos + j here,
+            # exactly what the sequential decode of that token would use
             off = cache_len[:, None] if jnp.ndim(cache_len) == 1 else cache_len
         base = jnp.arange(s, dtype=jnp.int32)[None, :] + off
         positions = jnp.broadcast_to(base, (b, s))

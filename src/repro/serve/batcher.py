@@ -34,19 +34,23 @@ class ServeFuture:
         self.t_done: Optional[float] = None
 
     def set_result(self, value: Any):
+        """Resolve the future with the request's result."""
         self._value = value
         self.t_done = time.perf_counter()
         self._done.set()
 
     def set_exception(self, err: BaseException):
+        """Fail the future; ``result()`` re-raises the error."""
         self._error = err
         self.t_done = time.perf_counter()
         self._done.set()
 
     def done(self) -> bool:
+        """True once a result or an exception has been set."""
         return self._done.is_set()
 
     def result(self, timeout: Optional[float] = None) -> Any:
+        """Block until resolved; return the value or re-raise."""
         if not self._done.wait(timeout):
             raise TimeoutError("serve request did not complete in time")
         if self._error is not None:
@@ -55,6 +59,7 @@ class ServeFuture:
 
     @property
     def latency_s(self) -> Optional[float]:
+        """Submit-to-done wall time in seconds (None while pending)."""
         return None if self.t_done is None else self.t_done - self.t_submit
 
 
@@ -74,6 +79,7 @@ class Request:
 
     @property
     def rows(self) -> int:
+        """Input rows this request contributes to a batch."""
         return 1 if getattr(self.x, "ndim", 1) == 1 else int(self.x.shape[0])
 
 
@@ -107,6 +113,7 @@ class MicroBatcher:
         return req.future
 
     def depth(self) -> int:
+        """Requests currently waiting in the queue."""
         return self._q.qsize()
 
     def shutdown(self):

@@ -37,6 +37,7 @@ class BucketPolicy:
     align: int = SUBLANE
 
     def validate(self) -> "BucketPolicy":
+        """Sanity-check the knobs; returns self for chaining."""
         assert self.max_batch >= 1 and self.align >= 1, (self.max_batch, self.align)
         assert self.max_wait_ms >= 0.0, self.max_wait_ms
         assert self.max_queue >= 1, self.max_queue

@@ -23,6 +23,10 @@ scrape metrics.
     PYTHONPATH=src python -m repro.serve.cli --smoke --lm-arch gemma2-2b \
         --continuous --paged --block-size 16 --prefill-chunk 16 --prefix-cache
 
+    # + the speculative-decoding gate (bit-identical tokens, accepted/step)
+    PYTHONPATH=src python -m repro.serve.cli --smoke --lm-arch gemma2-2b \
+        --continuous --paged --block-size 16 --speculative --draft-k 4
+
 ``--pretune`` warms the repro.tune cache for the serve bucket shapes first —
 the same job list ``python -m repro.tune.cli --serve`` persists offline.
 """
@@ -277,6 +281,9 @@ def _run_lm_continuous(args, cfg, params) -> int:
     prefix_ok = True
     if args.prefix_cache:
         prefix_ok = _gate_prefix(args, cfg, params)
+    spec_ok = True
+    if args.speculative:
+        spec_ok = _gate_speculative(args, cfg, params)
     if args.temperature or args.top_k:
         _demo_sampling(args, cfg, params)
     if args.json:
@@ -292,6 +299,7 @@ def _run_lm_continuous(args, cfg, params) -> int:
         and probe_err < 1e-3
         and paged_ok
         and prefix_ok
+        and spec_ok
         and obs_ok
     )
     return 0 if ok or not args.gate else 1
@@ -346,6 +354,34 @@ def _gate_prefix(args, cfg, params) -> bool:
     )
 
 
+def _gate_speculative(args, cfg, params) -> bool:
+    """Plain paged vs self-drafting speculative decode on a decode-heavy
+    workload: bit-identical greedy tokens (the hard gate — a smoke-sized run
+    is too short to gate CPU wall clock) and more than one token emitted per
+    verify slot-lane, i.e. the drafter is actually accepting tokens."""
+    from repro.serve.loadgen import LMLoadConfig, compare_speculative
+
+    load = LMLoadConfig(
+        n_requests=min(args.requests, 16),
+        prompt_lens=(4, 6, 8), new_tokens=(24, 32), seed=args.seed,
+    )
+    rep = compare_speculative(
+        cfg, params, load,
+        n_slots=args.slots,
+        page_size=args.block_size or 16,
+        draft_k=args.draft_k,
+    )
+    g = rep["gate"]
+    print(
+        f"[serve] speculative: accepted/step={g['accepted_tokens_per_step']:.2f} "
+        f"tokens/lane={g['tokens_per_lane']:.2f} "
+        f"hit_rate={g['draft_hit_rate']:.2f} "
+        f"tok/s ratio {g['tok_per_s_ratio']:.2f} "
+        f"(token mismatches: {g['token_mismatches']:.0f})"
+    )
+    return g["token_mismatches"] == 0 and g["tokens_per_lane"] > 1
+
+
 def _demo_sampling(args, cfg, params):
     """A short sampled batch through the paged/dense pool: per-request
     temperature/top-k/seed, reproducibility printed for two replays."""
@@ -381,6 +417,7 @@ def _demo_sampling(args, cfg, params):
 
 
 def main(argv=None) -> int:
+    """Argparse entry point (see the module docstring for usage)."""
     p = argparse.ArgumentParser(prog="repro.serve.cli", description=__doc__)
     p.add_argument("--smoke", action="store_true",
                    help="reduced config + few requests (CI smoke; implies --gate)")
@@ -423,6 +460,12 @@ def main(argv=None) -> int:
     p.add_argument("--prefill-chunk", type=int, default=None,
                    help="with --paged: prefill long prompts N tokens per decode "
                         "tick instead of stalling the pool")
+    p.add_argument("--speculative", action="store_true",
+                   help="with --paged: also gate self-drafting speculative "
+                        "decoding (bit-identical greedy tokens, more than one "
+                        "token emitted per verify slot-lane)")
+    p.add_argument("--draft-k", type=int, default=4,
+                   help="speculative draft tokens proposed per verify tick")
     p.add_argument("--prefix-cache", action="store_true",
                    help="with --paged: also gate the prefix-sharing radix "
                         "cache (bit-identical tokens + warm TTFT and peak "
@@ -453,6 +496,8 @@ def main(argv=None) -> int:
 
     if args.prefix_cache and not args.paged:
         p.error("--prefix-cache shares KV pages; it requires --paged")
+    if args.speculative and not args.paged:
+        p.error("--speculative verifies through scratch pages; it requires --paged")
 
     if args.smoke:
         args.requests = min(args.requests, 192)

@@ -103,6 +103,7 @@ class ServeEngine:
 
     @property
     def d(self) -> int:
+        """Embedding width (the projector's output dimension)."""
         return int(self.model_cfg.projector_widths[-1])
 
     def _embed_fn(self, bucket: int):
@@ -143,6 +144,7 @@ class ServeEngine:
         return bucket_sizes(self.policy)
 
     def compiled_buckets(self) -> Tuple[int, ...]:
+        """Batch sizes with a compiled executable, ascending."""
         return tuple(sorted(self._compiled))
 
     # -- serving forward ----------------------------------------------------
@@ -205,6 +207,7 @@ class LMServeEngine:
         )
 
     def generate(self, params, prompt_tokens: Array, max_new_tokens: int) -> Array:
+        """Whole-request greedy generation (the non-continuous path)."""
         from repro.train.serve import greedy_generate
 
         return greedy_generate(
@@ -240,8 +243,8 @@ class ContinuousLMEngine:
     token; the service samples the in-flight rows from it for the online
     decorrelation probes (``repro.decorr.probe.slot_probe_rows``).
 
-    Three orthogonal extensions over the PR 4 dense engine (each off by
-    default, leaving the dense greedy path's compiled graphs untouched):
+    Orthogonal extensions over the PR 4 dense engine (each off by default,
+    leaving the dense greedy path's compiled graphs untouched):
 
       * ``paged=True`` — the per-slot dense KV strips become fixed-size token
         pages addressed through block tables (``repro.serve.paging``): decode
@@ -272,6 +275,16 @@ class ContinuousLMEngine:
         quantized DOWN to a chunk boundary (and to ``prompt_len - 1``), so a
         warm prefill replays the exact executables on the exact values the
         cold run would produce from that boundary on.
+      * ``speculative=True`` (paged, greedy, attention-only) — each tick a
+        per-slot n-gram drafter (``repro.serve.spec``) proposes up to
+        ``draft_k`` tokens and ONE lane-batched verify forward (the decode
+        executable at batch ``n_slots * (draft_k + 1)``) scores all draft
+        positions at once; the longest draft prefix matching the model's own
+        argmax is accepted, advancing a slot several tokens per tick.
+        Speculative writes land on pinned scratch pages
+        (``PagedKVManager.spec_begin``) so a rejected draft leaves no trace
+        and speculation can never OOM an admitted slot; an accepted span
+        commits by SWAPPING scratch into the block table — no device copy.
     """
 
     def __init__(
@@ -292,6 +305,10 @@ class ContinuousLMEngine:
         compact_on_retire: bool = True,
         prefix_cache: bool = False,
         chunk_all: bool = False,
+        speculative: bool = False,
+        draft_k: int = 4,
+        spec_ngram_max: int = 3,
+        spec_ngram_min: int = 1,
     ):
         from repro.models.transformer import init_caches
         from repro.serve.slots import SlotPool
@@ -303,6 +320,7 @@ class ContinuousLMEngine:
             make_chunked_prefill_step,
             make_decode_step,
             make_prefill_at_step,
+            make_verify_step,
             reset_slot_state,
             reset_slot_state_paged,
         )
@@ -336,6 +354,31 @@ class ContinuousLMEngine:
         self.chunk_all = bool(chunk_all) or self.prefix_cache
         if self.prefix_cache and not self.paged:
             raise ValueError("prefix_cache shares KV pages; pass paged=True")
+        self.speculative = bool(speculative)
+        self.spec_cfg = None
+        if self.speculative:
+            from repro.serve.spec import SpecConfig
+
+            if not self.paged:
+                raise ValueError(
+                    "speculative decoding verifies through scratch pages; pass paged=True"
+                )
+            if self.sampling_enabled:
+                raise ValueError(
+                    "speculative decoding is greedy-only: acceptance compares the "
+                    "draft against argmax outputs (sampling would need rejection "
+                    "sampling over the verify logits)"
+                )
+            if not self.pad_prompts:
+                raise ValueError(
+                    "speculative decoding needs attention-only patterns: SSM/RWKV "
+                    "per-slot state cannot advance k+1 positions independently in "
+                    "one forward"
+                )
+            self.spec_cfg = SpecConfig(
+                draft_k=int(draft_k), ngram_max=int(spec_ngram_max),
+                ngram_min=int(spec_ngram_min),
+            )
         self.pager = None
         if self.paged:
             from repro.kernels.paged_attention.ops import auto_page_size
@@ -357,6 +400,7 @@ class ContinuousLMEngine:
                 arch_cfg, n_slots, max_len, page, total_pages=total_pages,
                 prefix_cache=self.prefix_cache,
                 prefix_chunk=int(prefill_chunk) if self.prefix_cache else None,
+                spec_draft_k=self.spec_cfg.draft_k if self.speculative else 0,
             )
             if self.prefix_cache:
                 self.pager.event_sink = self._record
@@ -430,6 +474,22 @@ class ContinuousLMEngine:
         # (the jit caches below ARE the AOT cache `warmup` fills)
         self._decode = jax.jit(_step_paged if self.paged else _step, donate_argnums=(1,))
         self._prefill = jax.jit(_pre)
+        if self.speculative:
+            verify = make_verify_step(arch_cfg, return_hidden=True)
+
+            def _verify_paged(params, caches, cache_len, tokens, block_tables,
+                              move_src, move_dst):
+                # boundary-page copies (one per drafted slot, sentinel
+                # identity moves as padding) fused into the verify
+                # executable: one device dispatch per tick, not two
+                caches = apply_page_moves(caches, move_src, move_dst)
+                logits, hidden, caches = verify(
+                    params, caches, cache_len, tokens=tokens[:, None],
+                    block_tables=block_tables,
+                )
+                return _pick(logits), hidden, caches
+
+            self._verify = jax.jit(_verify_paged, donate_argnums=(1,))
         if self.paged:
             self._insert = jax.jit(insert_slot_state_paged, donate_argnums=(0,))
             self._reset = jax.jit(reset_slot_state_paged, donate_argnums=(0,))
@@ -458,10 +518,12 @@ class ContinuousLMEngine:
     # -- admission-side shape policy ----------------------------------------
 
     def prompt_bucket_sizes(self) -> Tuple[int, ...]:
+        """Prompt-padding bucket ladder, ascending."""
         return bucket_sizes(self._prompt_policy)
 
     @property
     def max_prompt_len(self) -> int:
+        """Largest admissible prompt length (the top bucket)."""
         return self.prompt_bucket_sizes()[-1]
 
     def _prompt_bucket(self, n: int) -> int:
@@ -560,6 +622,26 @@ class ContinuousLMEngine:
             if self.prefix_cache:
                 # warm-template gather (all-sentinel row reads scratch rows)
                 self._loadtpl(self.caches, self._caches1, bt_row)
+            if self.speculative:
+                # the verify executable is the SAME jitted decode step at the
+                # lane-batched shape n_slots * (draft_k + 1): each lane is a
+                # plain one-token decode at its own (cache_len, table row)
+                width = self.spec_cfg.draft_k + 1
+                vb = self.pool.n_slots * width
+                vlens = jnp.zeros((vb,), jnp.int32)
+                vtoks = jnp.zeros((vb,), jnp.int32)
+                vbt = jnp.zeros((vb, nb), jnp.int32)
+                # boundary-page copies ride inside the verify executable,
+                # one (sentinel-padded) move per slot
+                sidx = jnp.zeros((self.pool.n_slots,), jnp.int32)
+                if self.perf is not None:
+                    self.perf.attach_jit(
+                        "verify_step", self._verify,
+                        self.params, self.caches, vlens, vtoks, vbt, sidx, sidx,
+                    )
+                _, _, self.caches = self._verify(
+                    self.params, self.caches, vlens, vtoks, vbt, sidx, sidx
+                )
         else:
             if self.perf is not None:
                 self.perf.attach_jit(
@@ -580,6 +662,7 @@ class ContinuousLMEngine:
     # -- slot mechanics ------------------------------------------------------
 
     def needs_chunking(self, prompt_len: int) -> bool:
+        """True when this prompt prefills chunk-at-a-time."""
         if self.prefill_chunk is None:
             return False
         return self.chunk_all or prompt_len > self.prefill_chunk
@@ -604,6 +687,10 @@ class ContinuousLMEngine:
                 self.pager.admit(slot.index, req.prompt_len, req.max_new_tokens)
         if self.needs_chunking(req.prompt_len):
             slot.prefill_pos = hit
+        if self.speculative:
+            from repro.serve.spec import SlotDraft
+
+            slot.draft = SlotDraft(self.spec_cfg, np.asarray(req.tokens).tolist())
         return hit
 
     def _record(self, kind: str, **fields):
@@ -774,6 +861,92 @@ class ContinuousLMEngine:
         if perf is not None:
             perf.observe("decode_step", perf.elapsed(t0))
         return result
+
+    # -- speculative decoding -------------------------------------------------
+
+    def spec_verify(self, drafts):
+        """One lane-batched speculative verify over the whole pool.
+
+        ``drafts`` is a list of ``(slot_index, draft_tokens)`` covering every
+        decoding slot this tick (``draft_tokens`` may be empty: that slot
+        rides lane 0 only, which is exactly its plain decode step).  Lane
+        ``(s, j)`` of the fixed ``n_slots * (draft_k + 1)`` batch decodes
+        slot ``s`` at ``cache_len = pos + j`` with input token ``last_token``
+        (j = 0) or ``draft[j - 1]`` — per-lane math identical to the pool
+        decode step, which is what keeps greedy outputs bit-identical to
+        sequential decode.  Drafted slots read/write through scratch-mapped
+        table rows (``PagedKVManager.spec_begin``); unused lanes are masked
+        like free pool lanes (cache_len 0, sentinel rows).
+
+        Returns ``(out, hidden, tickets)``: ``(n_slots, draft_k + 1)`` token
+        ids, ``(n_slots, draft_k + 1, d_model)`` hidden rows, and the per-slot
+        scratch tickets the caller must settle via ``spec_commit`` (always —
+        lane 0's write is real even when the whole draft is rejected) or
+        ``spec_rollback`` (error/abort paths only).
+        """
+        width = self.spec_cfg.draft_k + 1
+        nb = self.pager.blocks_per_slot
+        n = self.pool.n_slots
+        lens = np.zeros((n * width,), np.int32)
+        toks = np.zeros((n * width,), np.int32)
+        tables = np.zeros((n * width, nb), np.int32)  # sentinel-masked lanes
+        tickets = {}
+        copies = []
+        for slot_index, draft in drafts:
+            s = self.pool[slot_index]
+            k_eff = len(draft)
+            if k_eff:
+                ticket, moves = self.pager.spec_begin(slot_index, s.pos, k_eff)
+                tickets[slot_index] = ticket
+                copies.extend(moves)
+                row = ticket.row
+            else:
+                # undrafted slot: plain decode through its REAL table row
+                added = self.pager.ensure_rows(slot_index, s.pos + 1)
+                if added:
+                    self._record("page_alloc", slot=slot_index, pages=len(added),
+                                 in_use=self.pager.alloc.in_use)
+                row = self.pager.table_row(slot_index)
+            base = slot_index * width
+            for j in range(k_eff + 1):
+                lens[base + j] = s.pos + j
+                toks[base + j] = s.last_token if j == 0 else draft[j - 1]
+                tables[base + j] = row
+        perf = self.perf
+        t0 = perf.start() if perf is not None else 0.0
+        # boundary-page copies, one lane per slot (zeros are sentinel ->
+        # sentinel identity no-ops), fused into the verify executable
+        src = np.zeros((n,), np.int32)
+        dst = np.zeros((n,), np.int32)
+        for i, (a, b) in enumerate(copies):
+            src[i], dst[i] = a, b
+        try:
+            out, hidden, self.caches = self._verify(
+                self.params, self.caches, jnp.asarray(lens), jnp.asarray(toks),
+                jnp.asarray(tables), jnp.asarray(src), jnp.asarray(dst),
+            )
+        except Exception:
+            # a failed device step must not leak the scratch inventory
+            for ticket in tickets.values():
+                self.pager.spec_rollback(ticket)
+            raise
+        result = (
+            np.asarray(out).reshape(n, width),
+            np.asarray(hidden, np.float32).reshape(n, width, -1),
+            tickets,
+        )
+        if perf is not None:
+            perf.observe("verify_step", perf.elapsed(t0))
+        return result
+
+    def spec_commit(self, ticket, n_written: int):
+        """Promote ``n_written`` verified rows into the slot's block table
+        (pure table swap — no device copy on the accept path)."""
+        self.pager.spec_commit(ticket, n_written)
+
+    def spec_rollback(self, ticket):
+        """Discard a speculative window, restoring table state exactly."""
+        self.pager.spec_rollback(ticket)
 
     def abort_slot(self, index: int):
         """Host-side-only cleanup for a slot whose device step failed: drop

@@ -50,6 +50,7 @@ SENTINEL = 0
 
 
 def pages_for(n_tokens: int, page: int) -> int:
+    """Pages needed to hold ``n_tokens`` at ``page`` tokens per page."""
     return -(-max(int(n_tokens), 0) // page)
 
 
@@ -85,26 +86,33 @@ class PageAllocator:
 
     @property
     def usable_pages(self) -> int:
+        """Allocatable pages (total minus the sentinel page 0)."""
         return self.total_pages - 1  # minus the sentinel
 
     @property
     def pinned_pages(self) -> int:
+        """Pages with at least one pin."""
         return len(self._pins)
 
     @property
     def shared_pages(self) -> int:
+        """Pages mapped by two or more owners."""
         return sum(1 for c in self._refcount.values() if c >= 2)
 
     def free_pages(self) -> int:
+        """Pages currently on the free list."""
         return len(self._free)
 
     def pages_for_tokens(self, n_tokens: int) -> int:
+        """Pages needed for ``n_tokens`` at this pool's page size."""
         return pages_for(n_tokens, self.page)
 
     def refcount(self, phys: int) -> int:
+        """Current owner count of a physical page."""
         return self._refcount.get(phys, 0)
 
     def pin_count(self, phys: int) -> int:
+        """Current pin count of a physical page."""
         return self._pins.get(phys, 0)
 
     def can_reserve(self, n_tokens: int, *, shared_pages: int = 0,
@@ -167,6 +175,7 @@ class PageAllocator:
         self._pins[phys] = self._pins.get(phys, 0) + 1
 
     def unpin_page(self, phys: int):
+        """Drop one pin from a page (raises if it is not pinned)."""
         count = self._pins.get(phys, 0)
         if count < 1:
             raise RuntimeError(f"unpin of unpinned page {phys}")
@@ -178,9 +187,11 @@ class PageAllocator:
     # -- allocation -----------------------------------------------------------
 
     def table(self, slot: int) -> List[int]:
+        """Copy of a slot's block table (physical page per block)."""
         return list(self._tables[slot])
 
     def shared_count(self, slot: int) -> int:
+        """How many of a slot's mapped pages are shared."""
         return self._shared_count[slot]
 
     def _alloc_page(self) -> int:
@@ -240,6 +251,47 @@ class PageAllocator:
             tbl.append(phys)
         return added
 
+    def alloc_pinned(self, n: int) -> List[int]:
+        """Allocate ``n`` pages OUTSIDE any slot table and pin them — the
+        speculative scratch pool.  Pinning charges them against the
+        ``reserved + pinned <= usable`` admission invariant permanently, so
+        speculation can never OOM an admitted slot: every scratch page was
+        subtracted from admission capacity up front."""
+        if self.reserved_total + self.pinned_pages + int(n) > self.usable_pages:
+            raise RuntimeError(
+                f"cannot pin {n} scratch pages: only "
+                f"{self.usable_pages - self.reserved_total - self.pinned_pages} "
+                "unreserved pages available"
+            )
+        pages = []
+        for _ in range(int(n)):
+            phys = self._alloc_page()
+            self.pin_page(phys)
+            pages.append(phys)
+        return pages
+
+    def swap_page(self, slot: int, block: int, new_phys: int) -> int:
+        """Swap pinned out-of-table page ``new_phys`` into the slot's table
+        at ``block``, returning the displaced page (which inherits the pin —
+        the speculative commit: scratch becomes the slot's tail page, the old
+        tail page becomes scratch).  Refcounts, the free list, and the total
+        pin count are all unchanged, so every admission invariant survives.
+        Only exclusive, unpinned table pages may be displaced."""
+        tbl = self._tables[slot]
+        old = tbl[block]
+        if block < self._shared_count[slot]:
+            raise RuntimeError(f"swap of shared block {block} in slot {slot}")
+        if self._refcount.get(old, 0) != 1 or old in self._pins:
+            raise RuntimeError(
+                f"swap target page {old} is shared or pinned (slot {slot} block {block})"
+            )
+        if self._refcount.get(new_phys, 0) != 1 or new_phys not in self._pins:
+            raise RuntimeError(f"swap source {new_phys} must be an exclusive pinned page")
+        tbl[block] = new_phys
+        self.unpin_page(new_phys)
+        self.pin_page(old)
+        return old
+
     def release(self, slot: int):
         """Drop the slot's ownership of its pages and return its reservation.
         Shared pages survive under their remaining owners (radix cache or
@@ -293,6 +345,7 @@ class PageAllocator:
     # -- scrape surface -------------------------------------------------------
 
     def metrics(self, prefix: str = "pages_") -> Dict[str, float]:
+        """Flat gauge dict of pool occupancy/sharing counters."""
         return {
             f"{prefix}total": float(self.usable_pages),
             f"{prefix}in_use": float(self.in_use),

@@ -63,7 +63,27 @@ class PrefixPlan:
 
     @property
     def pin_pages(self) -> List[int]:
+        """All pages this plan must pin (shared pages + the COW source)."""
         return self.shared + ([self.cow_src] if self.cow_src is not None else [])
+
+
+class SpecTicket:
+    """One in-flight speculative verify for one slot: which logical blocks
+    were remapped to scratch pages, and the scratch-mapped table row the
+    verify forward reads/writes through.  Produced by
+    :meth:`PagedKVManager.spec_begin`, consumed by exactly one of
+    :meth:`PagedKVManager.spec_commit` / :meth:`PagedKVManager.spec_rollback`."""
+
+    __slots__ = ("slot", "pos", "k_eff", "blocks", "scratch", "row")
+
+    def __init__(self, slot: int, pos: int, k_eff: int, blocks: List[int],
+                 scratch: List[int], row: np.ndarray):
+        self.slot = slot
+        self.pos = pos          # next write row (the slot's cache_len)
+        self.k_eff = k_eff      # draft tokens actually scored this tick
+        self.blocks = blocks    # logical blocks remapped to scratch
+        self.scratch = scratch  # scratch physical ids, parallel to blocks
+        self.row = row          # (NB,) table row with blocks -> scratch
 
 
 class PagedKVManager:
@@ -78,6 +98,7 @@ class PagedKVManager:
         total_pages: Optional[int] = None,
         prefix_cache: bool = False,
         prefix_chunk: Optional[int] = None,
+        spec_draft_k: int = 0,
     ):
         assert max_len % page == 0, (
             f"max_len={max_len} must be a multiple of the page size {page} "
@@ -93,11 +114,29 @@ class PagedKVManager:
         self.max_len = int(max_len)
         self.page = int(page)
         self.blocks_per_slot = max_len // page
+        # speculative scratch: a verify touching rows [pos, pos + k] spans at
+        # most ceil((page - 1 + k) / page) + 1 blocks (worst case pos at the
+        # last row of a page), per slot, per tick
+        self.spec_draft_k = int(spec_draft_k)
+        self.spec_blocks_per_slot = (
+            (page - 1 + self.spec_draft_k) // page + 1 if self.spec_draft_k else 0
+        )
+        n_scratch = self.n_slots * self.spec_blocks_per_slot
         # +1: the sentinel page.  The default pool matches dense capacity —
         # the memory win comes from sizing total_pages to the workload (the
         # bench does) while reservation accounting keeps admission OOM-safe.
-        self.total_pages = int(total_pages or (self.n_slots * self.blocks_per_slot + 1))
+        # Speculation adds its scratch pages ON TOP of the default so the
+        # admission capacity seen by requests is unchanged.
+        self.total_pages = int(
+            total_pages or (self.n_slots * self.blocks_per_slot + 1 + n_scratch)
+        )
         self.alloc = PageAllocator(self.total_pages, page, n_slots, self.blocks_per_slot)
+        # scratch pages are allocated + pinned up front: the pin charges them
+        # against the `reserved + pinned <= usable` invariant, so speculative
+        # writes can never OOM an admitted slot
+        self._spec_free: List[int] = (
+            self.alloc.alloc_pinned(n_scratch) if n_scratch else []
+        )
         self.prefix_cache = bool(prefix_cache)
         self.radix: Optional[RadixCache] = None
         # flight-recorder tap the engine installs (kind, **fields)
@@ -123,6 +162,7 @@ class PagedKVManager:
     # -- device tree construction --------------------------------------------
 
     def init_caches(self):
+        """Allocate the pool's paged KV caches (all-sentinel tables)."""
         from repro.models.transformer import init_paged_caches
 
         return init_paged_caches(self.cfg, self.n_slots, self.total_pages, self.page)
@@ -163,11 +203,13 @@ class PagedKVManager:
     # -- admission / growth / retirement --------------------------------------
 
     def rows_needed(self, prompt_len: int, max_new_tokens: int) -> int:
+        """Cache rows a request needs: ``prompt + max_new - 1``."""
         # the final emitted token is never written (same row accounting as
         # the dense pool's admission check)
         return prompt_len + max_new_tokens - 1
 
     def fits_ever(self, prompt_len: int, max_new_tokens: int) -> bool:
+        """True if the request could ever fit an empty pool."""
         return self.alloc.fits_ever(self.rows_needed(prompt_len, max_new_tokens))
 
     def plan_prefix(self, tokens, prompt_len: int) -> PrefixPlan:
@@ -188,6 +230,7 @@ class PagedKVManager:
 
     def can_admit(self, prompt_len: int, max_new_tokens: int,
                   plan: Optional[PrefixPlan] = None) -> bool:
+        """True if the unshared reservation fits the pool right now."""
         rows = self.rows_needed(prompt_len, max_new_tokens)
         if plan is None:
             return self.alloc.can_reserve(rows)
@@ -251,6 +294,71 @@ class PagedKVManager:
         """Guarantee the slot's table covers ``n_rows`` written rows."""
         return self.alloc.ensure(slot, n_rows)
 
+    # -- speculative scratch lifecycle ----------------------------------------
+    #
+    # A verify tick for one slot must read committed rows < pos and write the
+    # k_eff + 1 lane inputs at rows [pos, pos + k_eff] WITHOUT dirtying the
+    # slot's real pages (a truncated draft must leave no trace).  spec_begin
+    # remaps every touched logical block to a scratch page — copying the one
+    # partially-committed boundary page so reads stay bit-identical — and the
+    # verify forward runs through that remapped row.  spec_commit then SWAPS
+    # the scratch pages into the block table (the displaced pages become the
+    # new scratch inventory: zero copies on the accept path); spec_rollback
+    # just returns the scratch pages, leaving table and positions untouched.
+
+    def spec_begin(self, slot: int, pos: int,
+                   k_eff: int) -> Tuple[SpecTicket, List[Tuple[int, int]]]:
+        """Open a speculative verify window for ``slot`` at row ``pos``.
+
+        Returns the ticket plus (src, dst) physical page copies the engine
+        must apply (batched ``apply_page_moves``) BEFORE the verify forward:
+        only the boundary block containing committed rows needs copying —
+        blocks whose rows are all >= ``pos`` hold no live data (stale
+        speculative writes there are masked by ``cache_len``).
+        """
+        b0 = pos // self.page
+        b1 = (pos + k_eff) // self.page
+        blocks = list(range(b0, b1 + 1))
+        if len(blocks) > self.spec_blocks_per_slot:
+            raise RuntimeError(
+                f"verify spans {len(blocks)} blocks > scratch budget "
+                f"{self.spec_blocks_per_slot} (k_eff={k_eff})"
+            )
+        scratch = [self._spec_free.pop() for _ in blocks]
+        row = self.table_row(slot)
+        copies: List[Tuple[int, int]] = []
+        if pos % self.page:
+            copies.append((int(row[b0]), scratch[0]))
+        for b, s in zip(blocks, scratch):
+            row[b] = s
+        return SpecTicket(slot, pos, k_eff, blocks, scratch, row), copies
+
+    def spec_commit(self, ticket: SpecTicket, n_written: int):
+        """Promote a verified span into the slot's block table.
+
+        ``n_written`` is the accepted input rows (``1 + accepted_draft`` —
+        lane 0's write at ``pos`` is the one plain decode would have done, so
+        this is always >= 1).  Blocks covering those rows swap their scratch
+        page in (the displaced page returns to the scratch pool — a pure
+        table edit, no device copy); scratch beyond the written span is
+        returned unused.  Real pages for newly covered blocks are ensured
+        here, never in spec_begin, so rollback stays an exact no-op."""
+        assert n_written >= 1, n_written
+        self.ensure_rows(ticket.slot, ticket.pos + n_written)
+        last_block = (ticket.pos + n_written - 1) // self.page
+        for b, s in zip(ticket.blocks, ticket.scratch):
+            if b <= last_block:
+                self._spec_free.append(self.alloc.swap_page(ticket.slot, b, s))
+            else:
+                self._spec_free.append(s)
+
+    def spec_rollback(self, ticket: SpecTicket):
+        """Discard a speculative window: scratch pages return to the pool and
+        the block table / reservations are exactly as before ``spec_begin``
+        (nothing was ensured, nothing swapped — stale device writes on the
+        scratch pages are dead data)."""
+        self._spec_free.extend(ticket.scratch)
+
     def donate(self, slot: int, tokens) -> int:
         """Intern the slot's full prompt pages into the radix tree at the end
         of prefill (first writer wins).  Returns pages newly cached."""
@@ -267,6 +375,7 @@ class PagedKVManager:
         return len(new)
 
     def release(self, slot: int):
+        """Return a slot's pages, pins and reservation to the pool."""
         for phys in self._pins.pop(slot, []):
             self.alloc.unpin_page(phys)
         self._cow.pop(slot, None)
@@ -299,6 +408,7 @@ class PagedKVManager:
 
     @property
     def page_bytes(self) -> int:
+        """Bytes of KV state one page holds across all attention layers."""
         return attn_kv_bytes_per_row(self.cfg) * self.page
 
     def peak_cache_bytes(self) -> int:
@@ -307,12 +417,15 @@ class PagedKVManager:
         return self.alloc.peak_pages * self.page_bytes
 
     def pool_cache_bytes(self) -> int:
+        """Total bytes of the paged pool's usable pages."""
         return self.alloc.usable_pages * self.page_bytes
 
     def dense_equiv_bytes(self) -> int:
+        """Bytes the dense per-slot pool would reserve instead."""
         return dense_cache_bytes(self.cfg, self.n_slots, self.max_len)
 
     def metrics(self, prefix: str = "paged_") -> Dict[str, float]:
+        """Allocator counters plus paged/prefix/spec gauges, one flat dict."""
         out = {f"{prefix}{k}": v for k, v in self.alloc.metrics(prefix="pages_").items()}
         # derived occupancy ratio so threshold alert rules (page_pool_pressure)
         # can target one gauge instead of dividing two
@@ -320,6 +433,11 @@ class PagedKVManager:
             self.alloc.in_use / self.alloc.usable_pages if self.alloc.usable_pages else 0.0
         )
         out[f"{prefix}page_tokens"] = float(self.page)
+        if self.spec_draft_k:
+            out[f"{prefix}spec_scratch_pages"] = float(
+                self.n_slots * self.spec_blocks_per_slot
+            )
+            out[f"{prefix}spec_scratch_free"] = float(len(self._spec_free))
         out[f"{prefix}peak_cache_bytes"] = float(self.peak_cache_bytes())
         out[f"{prefix}pool_cache_bytes"] = float(self.pool_cache_bytes())
         out[f"{prefix}dense_equiv_bytes"] = float(self.dense_equiv_bytes())

@@ -37,6 +37,7 @@ from .allocator import PageAllocator
 
 
 class RadixNode:
+    """One page-granular tree node: token key, donated pages, children."""
     __slots__ = ("key", "pages", "children", "parent", "last_used")
 
     def __init__(self, key: Tuple[int, ...], pages: List[int],
@@ -60,6 +61,11 @@ class PrefixMatch:
 
 
 class RadixCache:
+    """Page-granularity radix tree over retired prompts' KV pages.
+
+    First writer wins; lookups share pages by refcount; eviction
+    truncates LRU leaf tails under pool pressure (module docstring).
+    """
     def __init__(self, page: int, alloc: PageAllocator):
         assert page >= 1
         self.page = int(page)
@@ -242,6 +248,7 @@ class RadixCache:
     # -- scrape surface ----------------------------------------------------------
 
     def metrics(self, prefix: str = "radix_") -> Dict[str, float]:
+        """Flat gauge dict of cache size / hit / eviction counters."""
         return {
             f"{prefix}cached_pages": float(self.cached_pages),
             f"{prefix}nodes": float(self.nodes),

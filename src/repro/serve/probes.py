@@ -124,6 +124,7 @@ class DecorrProbe:
 
     @property
     def steps(self) -> int:
+        """Probe updates observed so far."""
         return self._step
 
     def feature_moments(self):
@@ -134,6 +135,7 @@ class DecorrProbe:
         return self._mean_ema, var
 
     def metrics(self, prefix: str = "decorr_") -> Dict[str, float]:
+        """Latest probe values as flat ``decorr_*`` gauges."""
         out = {f"{prefix}probe_steps": float(self._step)}
         for k, v in self._last.items():
             out[f"{prefix}{k}"] = v

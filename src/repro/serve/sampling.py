@@ -42,6 +42,7 @@ class SamplingParams:
     seed: Optional[int] = None
 
     def validate(self) -> "SamplingParams":
+        """Range-check the knobs; returns self for chaining."""
         if self.temperature < 0.0:
             raise ValueError(f"temperature must be >= 0, got {self.temperature}")
         if self.top_k is not None and self.top_k < 0:
@@ -50,6 +51,7 @@ class SamplingParams:
 
     @property
     def greedy(self) -> bool:
+        """True when temperature 0 makes sampling exact argmax."""
         return self.temperature == 0.0
 
 

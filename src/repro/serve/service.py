@@ -99,16 +99,19 @@ class LatencyStats:
         self._t_start = time.perf_counter()
 
     def observe_batch(self, latencies_s: List[float]):
+        """Fold one dispatched batch's per-request latencies in."""
         self._lat.extend(latencies_s)
         self.served += len(latencies_s)
         self.batches += 1
 
     def percentile(self, q: float) -> float:
+        """Latency percentile (seconds) over the rolling window."""
         if not self._lat:
             return 0.0
         return float(np.percentile(np.asarray(self._lat), q))
 
     def metrics(self, prefix: str = "latency_") -> Dict[str, float]:
+        """Flat latency/throughput gauges for the scrape surface."""
         dt = max(time.perf_counter() - self._t_start, 1e-9)
         return {
             f"{prefix}p50_ms": self.percentile(50) * 1e3,
@@ -261,6 +264,7 @@ class EmbeddingService(_ObsAPI):
         return self
 
     def start(self) -> "EmbeddingService":
+        """Run the dispatch loop on a daemon thread; returns self."""
         if self._thread is not None:
             raise RuntimeError("service already started")
         self._thread = threading.Thread(target=self._loop, name="serve-dispatch", daemon=True)
@@ -269,6 +273,7 @@ class EmbeddingService(_ObsAPI):
         return self
 
     def stop(self, timeout: float = 10.0):
+        """Shut the dispatch thread down (queue sentinel, then join)."""
         if self._thread is None:
             return
         self.batcher.shutdown()
@@ -278,6 +283,7 @@ class EmbeddingService(_ObsAPI):
     # -- scrape surface -----------------------------------------------------
 
     def metrics(self) -> Dict[str, float]:
+        """The embedding service's full flat-gauge scrape surface."""
         return collect_metrics(
             {
                 "queue_depth": float(self.batcher.depth()),
@@ -352,6 +358,15 @@ class LMService(_ObsAPI):
         self._h_ttft = reg.histogram(
             "serve_ttft_seconds", "time to first token (queue + prefill)"
         )
+        self._h_verify = reg.histogram(
+            "serve_verify_step_seconds",
+            "one lane-batched speculative verify forward wall time",
+        )
+        # speculative-decoding counters (zeroed/no-op unless the engine was
+        # built with speculative=True)
+        from repro.serve.spec import SpecStats
+
+        self.spec_stats = SpecStats()
         n_slots = engine.pool.n_slots
         self.batcher = MicroBatcher(
             BucketPolicy(max_batch=n_slots, max_wait_ms=0.0, max_queue=max_queue)
@@ -488,6 +503,91 @@ class LMService(_ObsAPI):
         if slot.emit(self._pick_token(slot, out)):
             self._finish(self.engine.pool.retire(slot.index))
 
+    def _spec_tick(self, active: List[int]) -> bool:
+        """One speculative decode tick over the decoding slots.
+
+        Drafts per slot (host-side n-gram lookup, attributed as ``draft``),
+        then — when at least one slot produced a draft — runs ONE lane-batched
+        verify forward for the whole pool (undrafted slots ride their plain
+        lane 0), accepts the longest matching prefix per slot and emits the
+        accepted span plus the model's bonus token.  Returns False when no
+        slot drafted, signalling the caller to run the plain decode step
+        (cheaper: batch ``n_slots`` instead of ``n_slots * (k + 1)``).
+        """
+        from repro.serve.spec import accept_length, draft_budget
+
+        pool = self.engine.pool
+        rec = self.obs.recorder
+        stats = self.spec_stats
+        perf = self.engine.perf
+        t0 = perf.start() if perf is not None else 0.0
+        drafts = []
+        any_draft = False
+        for i in active:
+            s = pool[i]
+            budget = draft_budget(
+                self.engine.spec_cfg.draft_k, s.request.max_new_tokens, len(s.emitted)
+            )
+            d = s.draft.propose(budget) if budget > 0 else []
+            stats.drafts += 1
+            if d:
+                stats.draft_hits += 1
+                any_draft = True
+                rec.record("spec_draft", slot=i, k=len(d))
+            drafts.append((i, d))
+        if perf is not None:
+            perf.observe("draft", perf.elapsed(t0))
+        if not any_draft:
+            stats.plain_steps += 1
+            return False
+        t0 = time.perf_counter()
+        out, hidden, tickets = self.engine.spec_verify(drafts)
+        if self.obs.enabled:
+            t1 = time.perf_counter()
+            self._h_verify.observe(t1 - t0)
+            self.obs.tracer.add_span("verify_step", t0, t1, cat="exec",
+                                     lanes=len(active))
+        stats.verify_steps += 1
+        stats.slot_lanes += len(active)
+        pool.observe_step()
+        for i, d in drafts:
+            s = pool[i]
+            k_eff = len(d)
+            lane_out = out[i]
+            a = accept_length(d, lane_out[: k_eff + 1]) if k_eff else 0
+            ticket = tickets.get(i)
+            if ticket is not None:
+                # commit ALWAYS: lane 0's write at pos is the one plain
+                # decode would have done, even when the whole draft missed
+                self.engine.spec_commit(ticket, a + 1)
+            if k_eff:
+                s.draft.observe_accept(a)
+                stats.tokens_proposed += k_eff
+                stats.tokens_accepted += a
+                if a < k_eff:
+                    stats.rejects += 1
+                    rec.record("spec_reject", slot=i, k=k_eff, accepted=a)
+                rec.record("spec_accept", slot=i, k=k_eff, accepted=a,
+                           emitted=a + 1)
+            n_emitted = 0
+            done = False
+            tr = _trace_of(s.future)
+            for j in range(a + 1):
+                if tr is not None:
+                    tr.tick()
+                done = s.emit(self._pick_token(s, lane_out[j]))
+                n_emitted += 1
+                if done:
+                    break
+            stats.tokens_emitted += n_emitted
+            stats.per_slot[i] = stats.per_slot.get(i, 0) + n_emitted
+            # one hidden row per emitted token — the same rows, in the same
+            # per-slot order, that sequential decode would have fed the probe
+            self._feed_probe(hidden[i, :n_emitted])
+            if done:
+                self._finish(pool.retire(i))
+        return True
+
     def step(self, timeout: float = 0.0) -> Optional[int]:
         """One scheduler tick: admit into freed slots (deferring requests
         whose page reservation does not fit yet), advance at most one chunk
@@ -560,7 +660,16 @@ class LMService(_ObsAPI):
                 if res is not None:
                     self._emit_first(chunk_slot, *res)
         active = pool.decoding_indices()
-        if active:
+        spec_ran = False
+        if active and self.engine.speculative:
+            try:
+                spec_ran = self._spec_tick(active)
+            except Exception as e:  # pragma: no cover - device failure path
+                for i in pool.active_indices():
+                    self.engine.abort_slot(i)
+                    self._fail(pool.retire(i).future, e)
+                spec_ran = True  # slots failed; no plain decode this tick
+        if active and not spec_ran:
             t0 = time.perf_counter()
             try:
                 next_out, hidden = self.engine.decode_step()
@@ -621,6 +730,7 @@ class LMService(_ObsAPI):
         return self
 
     def start(self) -> "LMService":
+        """Run the decode-tick loop on a daemon thread; returns self."""
         if self._thread is not None:
             raise RuntimeError("service already started")
         self._thread = threading.Thread(target=self._loop, name="serve-lm-decode", daemon=True)
@@ -630,6 +740,7 @@ class LMService(_ObsAPI):
         return self
 
     def stop(self, timeout: float = 30.0):
+        """Stop the tick thread (in-flight requests keep their state)."""
         if self._thread is None:
             return
         self.batcher.shutdown()
@@ -639,6 +750,7 @@ class LMService(_ObsAPI):
     # -- scrape surface -----------------------------------------------------
 
     def metrics(self) -> Dict[str, float]:
+        """The LM service's full flat-gauge scrape surface."""
         dt = max(time.perf_counter() - self._t0, 1e-9)
         ttft = np.asarray(self._ttft) if self._ttft else np.zeros((1,))
         own = {
@@ -653,10 +765,12 @@ class LMService(_ObsAPI):
         if self.engine.paged:
             paged = dict(self.engine.pager.metrics(),
                          admission_deferred=float(len(self._pending)))
+        spec = self.spec_stats.metrics() if self.engine.speculative else None
         return collect_metrics(
             own,
             self.engine.pool,
             paged,
+            spec,
             self.stats,
             self.heartbeat,
             self.probe,

@@ -50,6 +50,7 @@ class LMRequest:
 
     @property
     def prompt_len(self) -> int:
+        """Prompt length in tokens."""
         return int(np.shape(self.tokens)[0])
 
     @property
@@ -64,7 +65,7 @@ class ActiveSlot:
 
     __slots__ = (
         "request", "future", "index", "pos", "last_token", "emitted", "t_admit",
-        "rng", "prefill_pos",
+        "rng", "prefill_pos", "draft",
     )
 
     def __init__(self, request: LMRequest, future, index: int, seq: int = 0):
@@ -85,9 +86,13 @@ class ActiveSlot:
         # chunked prefill progress: prompt tokens already written to the
         # cache.  >= prompt_len (or no chunking) means the slot is decoding.
         self.prefill_pos: int = request.prompt_len
+        # speculative drafter (serve.spec.SlotDraft) when the engine runs
+        # with speculation; duck-typed here so this module stays jax-free
+        self.draft = None
 
     @property
     def prefilling(self) -> bool:
+        """True while the prompt is still prefilling (chunked path)."""
         return self.prefill_pos < self.request.prompt_len
 
     def emit(self, token: int) -> bool:
@@ -95,6 +100,8 @@ class ActiveSlot:
         self.emitted.append(int(token))
         self.last_token = int(token)
         self.pos += 1
+        if self.draft is not None:
+            self.draft.push(int(token))
         if self.request.eos_id is not None and int(token) == int(self.request.eos_id):
             return True
         return len(self.emitted) >= self.request.max_new_tokens
@@ -120,12 +127,15 @@ class SlotPool:
     # -- lifecycle ----------------------------------------------------------
 
     def free_slots(self) -> int:
+        """Slots currently free."""
         return len(self._free)
 
     def active(self) -> List[ActiveSlot]:
+        """The active slots, in pool order."""
         return [s for s in self._slots if s is not None]
 
     def active_indices(self) -> List[int]:
+        """Indices of the active slots, ascending."""
         return [i for i, s in enumerate(self._slots) if s is not None]
 
     def decoding_indices(self) -> List[int]:
@@ -154,6 +164,7 @@ class SlotPool:
         return slot
 
     def retire(self, index: int) -> ActiveSlot:
+        """Free a slot and return its final state."""
         slot = self._slots[index]
         assert slot is not None, f"slot {index} is not active"
         self._slots[index] = None
@@ -193,6 +204,7 @@ class SlotPool:
         return self.active_slot_steps / denom if denom else 0.0
 
     def metrics(self, prefix: str = "slots_") -> dict:
+        """Flat gauge dict of pool occupancy and throughput counters."""
         return {
             f"{prefix}total": float(self.n_slots),
             f"{prefix}active": float(self.n_slots - len(self._free)),

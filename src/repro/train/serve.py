@@ -70,6 +70,30 @@ def make_decode_step(cfg: ArchConfig, return_hidden: bool = False):
     return decode
 
 
+def make_verify_step(cfg: ArchConfig, return_hidden: bool = False):
+    """Multi-token speculative verify — the decode step at a lane-batched
+    shape.
+
+    The verify scores a slot's ``k`` drafted tokens (plus the bonus
+    position) by laying the ``k + 1`` positions out on the BATCH axis, not
+    the sequence axis: lane ``j`` carries ``cache_len = pos + j``, input
+    token ``last_token`` (j = 0) or ``draft[j - 1]``, and the slot's
+    (scratch-remapped) block-table row.  Every lane is then EXACTLY a
+    one-token paged decode — the same einsum shapes, the same
+    ``_decode_attention`` reduction — which is what keeps greedy speculative
+    outputs bit-identical to sequential decode (the chunked-prefill
+    sequence-axis path is only argmax-stable, so it cannot carry this
+    guarantee).  Scatter-before-gather inside ``_paged_decode`` makes lane
+    ``j`` see the writes of lanes ``< j``: they share the table row, and the
+    rows they write (``pos .. pos + j - 1``) are inside lane ``j``'s
+    ``cache_len`` window.
+
+    The returned callable IS ``make_decode_step``'s — one factory, one
+    contract, two batch shapes (``n_slots`` for the pool tick,
+    ``n_slots * (k + 1)`` for the verify)."""
+    return make_decode_step(cfg, return_hidden=return_hidden)
+
+
 def make_prefill_at_step(cfg: ArchConfig):
     """Prefill a right-padded prompt and read the step outputs at the TRUE
     last prompt token (``true_len - 1``), not the padded end.

@@ -1,0 +1,297 @@
+"""Speculative decoding: the n-gram drafter in isolation (suffix-table
+hit/miss, self-match skip, budget truncation at the request boundary), the
+scratch-page lifecycle on the paging manager (begin/commit/rollback — rollback
+must restore the block table and free inventory EXACTLY, property-style over
+random accept prefixes), the allocator's pinned-scratch primitives, and the
+end-to-end oracle: speculative greedy decode emits BIT-IDENTICAL tokens to
+plain paged greedy decode (itself pinned to whole-request ``greedy_generate``).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve import ContinuousLMEngine, LMService
+from repro.serve.paging import PageAllocator, PagedKVManager
+from repro.serve.spec import (
+    SlotDraft,
+    SpecConfig,
+    SpecStats,
+    accept_length,
+    draft_budget,
+)
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = get_config("gemma2-2b").reduced()
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Drafter (pure python, no jax)
+# ---------------------------------------------------------------------------
+
+
+class TestSlotDraft:
+    def test_repeated_ngram_hits_and_continues(self):
+        d = SlotDraft(SpecConfig(draft_k=4), [1, 2, 3, 9, 1, 2, 3])
+        # suffix (2, 3) matched at its earlier occurrence -> continuation 9 1 2 3
+        assert d.propose(4) == [9, 1, 2, 3]
+        assert d.propose(2) == [9, 1]
+        assert d.draft_hits == 2 and d.drafts == 2
+        assert d.hit_rate == 1.0
+
+    def test_miss_on_unseen_suffix(self):
+        d = SlotDraft(SpecConfig(), [1, 2, 3, 4, 5])
+        assert d.propose(4) == []
+        assert d.draft_hits == 0 and d.drafts == 1
+        assert d.hit_rate == 0.0
+
+    def test_self_match_is_skipped(self):
+        # every n-gram occurs exactly once: the query suffix only matches
+        # itself, which must not count as a hit
+        d = SlotDraft(SpecConfig(ngram_max=2), [1, 2, 3, 4])
+        assert d.propose(3) == []
+        # ... but a genuine earlier occurrence of the same suffix does
+        d.push(3)
+        d.push(4)
+        # earlier (3, 4) continues at ctx[4:] = [3, 4]; the third token wraps
+        # around the period-2 cycle the match implies
+        assert d.propose(3) == [3, 4, 3]
+
+    def test_longest_ngram_wins(self):
+        # suffix (7, 8) has an earlier occurrence continuing with 100;
+        # suffix (8,) alone also occurs earlier continuing with 200 — the
+        # longer match must win
+        d = SlotDraft(SpecConfig(ngram_max=2), [7, 8, 100, 8, 200, 7, 8])
+        assert d.propose(1) == [100]
+
+    def test_push_after_accept_extends_table(self):
+        d = SlotDraft(SpecConfig(ngram_max=1), [5])
+        assert d.propose(2) == []
+        d.push(6)
+        d.push(5)  # now 5 has an earlier occurrence followed by 6
+        assert d.propose(2) == [6, 5]
+        d.observe_accept(2)
+        assert d.accepted_total == 2
+
+    def test_propose_zero_budget_is_a_miss(self):
+        d = SlotDraft(SpecConfig(), [1, 1, 1, 1])
+        assert d.propose(0) == []
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="draft_k"):
+            SpecConfig(draft_k=0)
+        with pytest.raises(ValueError, match="ngram_min"):
+            SpecConfig(ngram_min=3, ngram_max=2)
+
+
+class TestBudgetAndAcceptance:
+    def test_budget_truncates_at_request_boundary(self):
+        # k+1 emits must never exceed the remaining token budget — the same
+        # bound that keeps verify writes inside rows = prompt + max_new - 1
+        assert draft_budget(4, 10, 0) == 4
+        assert draft_budget(4, 10, 5) == 4
+        assert draft_budget(4, 10, 6) == 3  # only 4 tokens left -> k <= 3
+        assert draft_budget(4, 10, 8) == 1
+        assert draft_budget(4, 10, 9) == 0  # last token: plain decode
+        assert draft_budget(4, 10, 10) == 0  # never negative
+
+    def test_accept_length_prefix_rule(self):
+        assert accept_length([5, 6, 7], [5, 6, 7, 8]) == 3  # full accept
+        assert accept_length([5, 6, 7], [5, 9, 7, 8]) == 1  # mismatch at 1
+        assert accept_length([5, 6, 7], [4, 6, 7, 8]) == 0  # reject all
+        assert accept_length([], [4]) == 0  # no draft -> bonus token only
+        # outputs shorter than proposed+1 bounds the accept
+        assert accept_length([5, 6, 7], [5, 6]) == 1
+
+    def test_stats_metrics_shape(self):
+        s = SpecStats()
+        s.verify_steps, s.tokens_emitted = 4, 10
+        s.tokens_proposed, s.tokens_accepted = 8, 6
+        s.drafts, s.draft_hits = 10, 8
+        m = s.metrics()
+        assert m["spec_accepted_tokens"] == pytest.approx(2.5)
+        assert m["spec_acceptance_rate"] == pytest.approx(0.75)
+        assert m["spec_draft_hit_rate"] == pytest.approx(0.8)
+
+
+# ---------------------------------------------------------------------------
+# Allocator scratch primitives
+# ---------------------------------------------------------------------------
+
+
+class TestAllocatorScratch:
+    def test_alloc_pinned_excluded_from_reservable(self):
+        a = PageAllocator(9, 8, 4, 4)  # 8 usable
+        scratch = a.alloc_pinned(2)
+        assert len(scratch) == 2 and a.pinned_pages == 2
+        assert a.can_reserve(48)  # 6 pages still reservable
+        assert not a.can_reserve(56)  # 7 would collide with the pinned pair
+        with pytest.raises(RuntimeError, match="scratch pages"):
+            a.alloc_pinned(7)
+
+    def test_swap_page_transfers_pin_and_page(self):
+        a = PageAllocator(9, 8, 4, 4)
+        a.reserve(0, 16)
+        a.ensure(0, 16)  # table [1, 2]
+        [s] = a.alloc_pinned(1)  # page 3, pinned
+        old = a.swap_page(0, 1, s)
+        assert old == 2 and a.table(0) == [1, 3]
+        # pin moved: the displaced page is pinned (it is now scratch), the
+        # swapped-in page is live in the table and unpinned
+        assert a.pinned_pages == 1
+        a.unpin_page(old)  # cannot swap an unpinned page in
+        with pytest.raises(RuntimeError, match="pinned"):
+            a.swap_page(0, 0, old)
+
+
+# ---------------------------------------------------------------------------
+# Manager scratch lifecycle: begin / commit / rollback
+# ---------------------------------------------------------------------------
+
+
+def _spec_manager(gemma, page=8, draft_k=4):
+    cfg, _ = gemma
+    return PagedKVManager(cfg, n_slots=2, max_len=32, page=page,
+                          spec_draft_k=draft_k)
+
+
+class TestManagerSpecLifecycle:
+    def test_scratch_reserved_at_construction(self, gemma):
+        m = _spec_manager(gemma)
+        assert m.spec_blocks_per_slot == 2  # page-1+k rows can straddle 2 pages
+        assert len(m._spec_free) == 2 * m.spec_blocks_per_slot
+        met = m.metrics()
+        assert met["paged_spec_scratch_pages"] == len(m._spec_free)
+        assert met["paged_spec_scratch_free"] == len(m._spec_free)
+
+    def test_begin_remaps_and_boundary_copy(self, gemma):
+        m = _spec_manager(gemma)
+        m.admit(0, prompt_len=10, max_new_tokens=8)
+        m.ensure_rows(0, 10)
+        before = m.table_row(0).copy()
+        # pos 9 mid-page: block 1 holds committed rows 8..9 -> must pre-copy
+        ticket, copies = m.spec_begin(0, pos=9, k_eff=4)
+        assert ticket.blocks == [1]
+        assert copies == [(int(before[1]), ticket.scratch[0])]
+        # the remap lives on the ticket's private row; the REAL table is
+        # untouched until commit, which is what makes rollback exact
+        assert ticket.row[1] == ticket.scratch[0]
+        np.testing.assert_array_equal(m.table_row(0), before)
+        m.spec_rollback(ticket)
+
+    def test_begin_page_aligned_needs_no_copy(self, gemma):
+        m = _spec_manager(gemma)
+        m.admit(0, prompt_len=8, max_new_tokens=8)
+        m.ensure_rows(0, 8)
+        ticket, copies = m.spec_begin(0, pos=8, k_eff=4)
+        assert copies == []  # block 1 has no committed rows
+        m.spec_rollback(ticket)
+
+    def test_rollback_restores_exactly_random_prefixes(self, gemma):
+        # property-style: whatever pos/k the verify used, rollback must put
+        # the block table AND the scratch inventory back bit-for-bit
+        m = _spec_manager(gemma)
+        m.admit(0, prompt_len=10, max_new_tokens=20)
+        rng = np.random.default_rng(7)
+        for _ in range(50):
+            pos = int(rng.integers(10, 25))
+            m.ensure_rows(0, pos)
+            k = int(rng.integers(1, 5))
+            table_before = m.table_row(0).copy()
+            free_before = sorted(m._spec_free)
+            ticket, _ = m.spec_begin(0, pos, k)
+            assert len(m._spec_free) == len(free_before) - len(ticket.scratch)
+            m.spec_rollback(ticket)
+            np.testing.assert_array_equal(m.table_row(0), table_before)
+            assert sorted(m._spec_free) == free_before
+
+    def test_commit_swaps_scratch_in_and_keeps_inventory(self, gemma):
+        m = _spec_manager(gemma)
+        m.admit(0, prompt_len=10, max_new_tokens=20)
+        rng = np.random.default_rng(11)
+        pos = 10
+        n_scratch = len(m._spec_free)
+        while pos < 28:
+            m.ensure_rows(0, pos)
+            k = min(4, 28 - pos)
+            ticket, _ = m.spec_begin(0, pos, k)
+            a = int(rng.integers(0, k + 1))  # random accepted prefix
+            m.spec_commit(ticket, a + 1)
+            # committed rows live on the swapped-in (former scratch) pages
+            row = m.table_row(0)
+            last_block = (pos + a) // m.page
+            for b, s in zip(ticket.blocks, ticket.scratch):
+                if b <= last_block:
+                    assert row[b] == s
+            # zero-copy commit never leaks or grows the scratch pool
+            assert len(m._spec_free) == n_scratch
+            pos += a + 1
+        m.release(0)
+        # only the permanent scratch pool survives retirement
+        assert m.alloc.in_use == len(m._spec_free)
+        assert m.alloc.reserved_total == 0
+
+
+# ---------------------------------------------------------------------------
+# End to end: speculative greedy == plain paged greedy == greedy_generate
+# ---------------------------------------------------------------------------
+
+
+SPEC = [(4, 12), (9, 8), (13, 8), (24, 6), (1, 10), (7, 7)]
+
+
+def _prompts(cfg, spec, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        (rng.integers(0, cfg.vocab_size, s).astype(np.int32), m) for s, m in spec
+    ]
+
+
+def _run_service(cfg, params, spec, **engine_kw):
+    eng = ContinuousLMEngine(cfg, params, n_slots=4, max_len=48,
+                             max_prompt_len=24, **engine_kw)
+    svc = LMService(eng)
+    svc.warmup(prompt_lens=[len(t) for t, _ in spec])
+    futs = [svc.submit(t, m) for t, m in spec]
+    svc.drain()
+    return [f.result(timeout=10) for f in futs], svc
+
+
+class TestSpeculativeBitIdentity:
+    def test_matches_oracle_and_speculates(self, gemma):
+        from repro.train.serve import greedy_generate
+        import jax.numpy as jnp
+
+        cfg, params = gemma
+        spec = _prompts(cfg, SPEC)
+        want = [
+            np.asarray(greedy_generate(params, cfg, jnp.asarray(t[None]), m,
+                                       max_len=48))[0]
+            for t, m in spec
+        ]
+        outs, svc = _run_service(cfg, params, spec, paged=True, page_size=8,
+                                 speculative=True, draft_k=4)
+        for w, o in zip(want, outs):
+            np.testing.assert_array_equal(o, w)
+        m = svc.metrics()
+        assert m["spec_verify_steps"] > 0
+        assert m["spec_tokens_accepted"] > 0  # random-init loops: drafts land
+        # every page accounted for after retirement, scratch intact
+        assert m["paged_pages_in_use"] == m["paged_spec_scratch_pages"] == \
+            m["paged_spec_scratch_free"]
+        assert m["paged_pages_reserved"] == 0.0
+
+    def test_gating_requires_paged_greedy_attention(self, gemma):
+        cfg, params = gemma
+        with pytest.raises(ValueError, match="paged"):
+            ContinuousLMEngine(cfg, params, n_slots=2, max_len=32,
+                               max_prompt_len=16, speculative=True)
+        with pytest.raises(ValueError, match="greedy"):
+            ContinuousLMEngine(cfg, params, n_slots=2, max_len=32,
+                               max_prompt_len=16, paged=True, page_size=8,
+                               speculative=True, sampling=True)

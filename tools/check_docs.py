@@ -1,0 +1,65 @@
+"""Stdlib markdown link + anchor checker for docs/ and README.md.
+
+Walks every markdown page, extracts inline links/images, and fails when a
+relative link points at a file that does not exist or an ``#anchor`` that no
+heading in the target page generates.  External (``http(s)://``, ``mailto:``)
+targets and relative targets resolving outside the repo (the CI badge's
+``../../actions/...`` URL) are skipped — this is a repo-consistency check,
+not a crawler.
+
+Run from the repo root: ``python tools/check_docs.py``
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+_ANCHOR_DROP = re.compile(r"[^\w\- ]")
+
+
+def github_anchor(heading: str) -> str:
+    """The anchor GitHub generates for a heading: lowercase, punctuation
+    stripped (underscores and hyphens survive), spaces to hyphens."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading.strip())
+    text = _ANCHOR_DROP.sub("", text.lower())
+    return text.replace(" ", "-")
+
+
+def anchors_of(md_text: str) -> set:
+    """All heading anchors a markdown page exposes (code fences excluded)."""
+    return {github_anchor(h) for h in HEADING.findall(CODE_FENCE.sub("", md_text))}
+
+
+def check(root: pathlib.Path) -> int:
+    """Check every docs/*.md page plus README.md; return the error count."""
+    pages = sorted(root.glob("docs/*.md")) + [root / "README.md"]
+    texts = {p: p.read_text() for p in pages if p.exists()}
+    errors = 0
+    for page, text in texts.items():
+        for target in LINK.findall(CODE_FENCE.sub("", text)):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = (page.parent / path_part).resolve() if path_part else page
+            if path_part and root.resolve() not in dest.parents and dest != root.resolve():
+                continue  # outside the repo (e.g. the CI badge link)
+            if not dest.exists():
+                print(f"{page.relative_to(root)}: broken link -> {target}")
+                errors += 1
+                continue
+            if anchor and dest.suffix == ".md":
+                dest_text = texts.get(dest) or dest.read_text()
+                if github_anchor(anchor) not in anchors_of(dest_text):
+                    print(f"{page.relative_to(root)}: missing anchor -> {target}")
+                    errors += 1
+    print(f"[docs] checked {len(texts)} pages: {errors} broken link(s)")
+    return errors
+
+
+if __name__ == "__main__":
+    sys.exit(1 if check(pathlib.Path(__file__).resolve().parent.parent) else 0)
