@@ -72,6 +72,20 @@ SPECDEC = dict(
     ngram_max=3,
     ngram_min=1,
 )
+# serving fabric: N threaded replicas behind the router (XLA releases the GIL
+# during device execution, so scaling needs real cores — the scaling target is
+# hardware-aware), plus the synchronous kill-one-replica failover leg and the
+# feature-sharded tp forward vs its single-device oracle
+FABRIC = dict(
+    replicas=2,
+    n_requests=16,
+    prompt_lens=(4, 8, 14),
+    new_tokens=(8, 16),
+    n_embed=4,
+    slots=4,
+    page_size=16,
+    tp=2,
+)
 
 
 def run():
@@ -119,6 +133,7 @@ def run():
     spec_report = _run_spec()
     obs_report = _run_obs_overhead()
     perf_report = _run_perf()
+    fabric_report = _run_fabric()
 
     out = {
         "config": {
@@ -130,6 +145,7 @@ def run():
             "paged": PAGED,
             "prefix": PREFIX,
             "spec": SPECDEC,
+            "fabric": FABRIC,
         },
         "naive": report["naive"],
         "microbatch": report["microbatch"],
@@ -144,6 +160,7 @@ def run():
         "spec": spec_report,
         "obs": obs_report,
         "perf": perf_report,
+        "fabric": fabric_report,
     }
     with open(os.path.join(os.getcwd(), "BENCH_serve.json"), "w") as f:
         json.dump(out, f, indent=2, sort_keys=True, default=float)
@@ -238,6 +255,23 @@ def run():
         f"ok={pf['has_required'] and pf['nonzero_samples'] and pf['utilization_ok']};"
         f"executables={pf['n_executables']};"
         f"max_disagreement={pf['max_disagreement']:.1f}",
+    ))
+    for name in ("single", "multi"):
+        r = fabric_report[name]
+        rows.append(fmt_row(
+            f"serve/fabric_{name}", r["p50_ms"] * 1e3,
+            f"p99_ms={r['p99_ms']:.2f};tok_per_s={r['tok_per_s']:.0f}",
+        ))
+    fg = fabric_report["gate"]
+    rows.append(fmt_row(
+        "serve/gate_fabric", 0.0,
+        f"ok={fg['scaling_ok'] and fg['token_mismatches'] == 0 and fg['requeue_token_mismatches'] == 0};"
+        f"scaling_x={fg['scaling_x']:.2f};target={fg['scaling_target']:.2f};"
+        f"cores={fg['cores']:.0f};"
+        f"requeued={fg['requeued']:.0f};"
+        f"token_mismatches={fg['token_mismatches']:.0f};"
+        f"requeue_token_mismatches={fg['requeue_token_mismatches']:.0f};"
+        f"tp_rel_err={fg['tp_rel_err']:.2e}",
     ))
     return rows
 
@@ -492,6 +526,93 @@ def _run_perf():
         "lm_tok_per_s": summary["tok_per_s"],
         "gate": gate,
     }
+
+
+def _tp_oracle_subprocess(tp: int) -> float:
+    """The tp-forward oracle needs > 1 device but this process already
+    imported jax single-device, so force host devices in a child and read
+    the error back (the test-suite pattern, see test_serve_fabric)."""
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent(
+        f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={tp}"
+        import jax
+        from repro.serve.loadgen import tp_oracle_err
+        from repro.train.ssl import SSLModelConfig, init_ssl_params
+
+        model = SSLModelConfig(input_dim=24, backbone_widths=(32,),
+                               projector_widths=(48, 48))
+        params = init_ssl_params(jax.random.PRNGKey(0), model)
+        print(tp_oracle_err(model, params, tp={tp}))
+        """
+    )
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        timeout=420,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"tp oracle subprocess failed:\n{proc.stderr[-3000:]}")
+    return float(proc.stdout.strip().splitlines()[-1])
+
+
+def _run_fabric():
+    """N threaded replicas behind the router vs one, the kill-one-replica
+    failover leg, and the tp-forward oracle (the acceptance gates:
+    route-independent AND requeue-surviving token identity — both must be
+    bit-exact — plus aggregate tok/s scaling against a hardware-aware
+    target: replica threads only overlap on real cores, so a 1-core runner
+    gates at ~parity while multi-core runners must show the scaling win)."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve.loadgen import FabricLoadConfig, LMLoadConfig, compare_fabric
+    from repro.train.ssl import SSLModelConfig, init_ssl_params
+
+    cfg = get_config(LM["arch"]).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    embed_model = SSLModelConfig(
+        input_dim=24, backbone_widths=(32,), projector_widths=(48, 48)
+    )
+    embed_params = init_ssl_params(jax.random.PRNGKey(1), embed_model)
+    load = FabricLoadConfig(
+        lm=LMLoadConfig(
+            n_requests=FABRIC["n_requests"],
+            prompt_lens=FABRIC["prompt_lens"],
+            new_tokens=FABRIC["new_tokens"],
+        ),
+        n_embed=FABRIC["n_embed"],
+        input_dim=24,
+    )
+    report = compare_fabric(
+        cfg, params, load,
+        replicas=FABRIC["replicas"],
+        n_slots=FABRIC["slots"],
+        page_size=FABRIC["page_size"],
+        embed_cfg=embed_model,
+        embed_params=embed_params,
+    )
+    cores = float(os.cpu_count() or 1)
+    scaling_target = 1.6 if cores >= 2 else 1.05
+    tp_err = _tp_oracle_subprocess(FABRIC["tp"])
+    report["gate"].update(
+        cores=cores,
+        scaling_target=scaling_target,
+        scaling_ok=report["gate"]["scaling_x"] >= scaling_target,
+        tp_rel_err=tp_err,
+        tp=float(FABRIC["tp"]),
+    )
+    # the labelled per-replica gauges don't serialize as flat floats; keep
+    # the flat subset in the JSON report
+    report["fabric_metrics"] = {
+        k: v for k, v in report["fabric_metrics"].items()
+        if isinstance(v, (int, float))
+    }
+    return report
 
 
 if __name__ == "__main__":

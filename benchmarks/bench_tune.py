@@ -46,10 +46,10 @@ def run():
     kw = dict(mode="dry", max_candidates=6, persist=False)
     shapes = _shapes()
     for i, (n, d) in enumerate(shapes):
-        plan_result, jobs = jobs_for(n, d, **kw)
+        plans, jobs = jobs_for(n, d, **kw)
         if i == len(shapes) - 1:
             jobs = jobs + SERVE_JOBS  # once, not per ssl width
-        results = [plan_result]
+        results = list(plans)
         for kernel, shape in jobs:
             results.append(tune.tune(kernel, shape, **kw))
         for res in results:

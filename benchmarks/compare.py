@@ -89,6 +89,18 @@ HARD_GATES = {
          "every attributed executable has nonzero wall-time samples"),
         ("perf.gate.utilization_ok", lambda v: bool(v),
          "every attributed executable's roofline utilization is in (0, 1]"),
+        ("fabric.gate.token_mismatches", lambda v: v == 0,
+         "replica routing changes no request's greedy tokens"),
+        ("fabric.gate.requeue_token_mismatches", lambda v: v == 0,
+         "failover requeue re-derives every killed replica's tokens bit-exactly"),
+        ("fabric.gate.requeued", lambda v: v > 0,
+         "the kill-one-replica leg actually stranded and requeued requests"),
+        ("fabric.gate.scaling_ok", lambda v: bool(v),
+         "N-replica aggregate tok/s meets the hardware-aware scaling target"),
+        ("fabric.gate.tp_rel_err", lambda v: v < 1e-5,
+         "feature-sharded tp forward matches the single-device oracle"),
+        ("fabric.gate.embed_max_abs_err", lambda v: v < 1e-5,
+         "embedding results are route-independent across replicas"),
     ],
     "tune": [],  # per-kernel gates generated below
 }

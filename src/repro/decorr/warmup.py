@@ -74,8 +74,8 @@ def warmup_tune_cache(
     rows, width = shard_local_shape(n, d, cfg, data_parallel=dp, model_parallel=mp)
 
     tune_kw = dict(mode=mode, persist=persist)
-    plan_result, jobs = jobs_for(rows, width, block_size=cfg.block_size, **tune_kw)
-    results = [plan_result]
+    plans, jobs = jobs_for(rows, width, block_size=cfg.block_size, **tune_kw)
+    results = list(plans)
     for kernel, shape in jobs:
         results.append(tune.tune(kernel, shape, **tune_kw))
     if verbose:

@@ -33,6 +33,11 @@ Layers (one module each):
                    ``metrics()`` dict and the registry in lockstep;
   * ``loadgen``  — deterministic load generation + naive-vs-micro-batched
                    policy comparison (the bench/CLI core);
+  * ``fabric``   — mesh-sharded serving fabric: ``ServeFabric`` routes over N
+                   isolated ``Replica`` stacks (least-occupancy /
+                   weighted-TTFT + prefix affinity) with heartbeat-driven
+                   drain-and-requeue failover; ``FabricConfig(tp=M)`` gives
+                   each replica a feature-sharded multi-device forward;
   * ``common``   — shared token-model helpers (prompt construction,
                    warmup-then-time generation);
   * ``cli``      — ``python -m repro.serve.cli`` (``--smoke`` in CI).
@@ -47,14 +52,24 @@ Layers (one module each):
 from repro.serve.batcher import Backpressure, MicroBatcher, ServeFuture
 from repro.serve.buckets import BucketPolicy, bucket_for, bucket_shapes, bucket_sizes
 from repro.serve.engine import ContinuousLMEngine, LMServeEngine, ServeEngine
+from repro.serve.fabric import (
+    FabricConfig,
+    Replica,
+    Router,
+    ServeFabric,
+    make_replica_mesh,
+)
 from repro.serve.loadgen import (
+    FabricLoadConfig,
     LMLoadConfig,
     LoadConfig,
+    compare_fabric,
     compare_lm_policies,
     compare_paged_dense,
     compare_policies,
     run_microbatched,
     run_naive,
+    tp_oracle_err,
 )
 from repro.serve.paging import PageAllocator, PagedKVManager
 from repro.serve.probes import DecorrProbe
@@ -68,6 +83,8 @@ __all__ = [
     "ContinuousLMEngine",
     "DecorrProbe",
     "EmbeddingService",
+    "FabricConfig",
+    "FabricLoadConfig",
     "LMLoadConfig",
     "LMRequest",
     "LMServeEngine",
@@ -76,17 +93,23 @@ __all__ = [
     "MicroBatcher",
     "PageAllocator",
     "PagedKVManager",
+    "Replica",
+    "Router",
     "SamplingParams",
     "ServeEngine",
+    "ServeFabric",
     "ServeFuture",
     "SlotPool",
     "bucket_for",
     "bucket_shapes",
     "bucket_sizes",
     "collect_metrics",
+    "compare_fabric",
     "compare_lm_policies",
     "compare_paged_dense",
     "compare_policies",
+    "make_replica_mesh",
     "run_microbatched",
     "run_naive",
+    "tp_oracle_err",
 ]

@@ -27,6 +27,11 @@ scrape metrics.
     PYTHONPATH=src python -m repro.serve.cli --smoke --lm-arch gemma2-2b \
         --continuous --paged --block-size 16 --speculative --draft-k 4
 
+    # + the fabric failover gate (kill one of N replicas mid-decode; the
+    # requeued requests must stay bit-identical to a 1-replica run)
+    PYTHONPATH=src python -m repro.serve.cli --smoke --lm-arch gemma2-2b \
+        --continuous --fabric --replicas 2
+
 ``--pretune`` warms the repro.tune cache for the serve bucket shapes first —
 the same job list ``python -m repro.tune.cli --serve`` persists offline.
 """
@@ -74,7 +79,17 @@ def _finish_obs(args, obs, report_metrics) -> bool:
             for line in text.splitlines()
             if line and not line.startswith("#")
         }
-        missing = [k for k in report_metrics if sanitize_name(k) not in exposed]
+        missing = []
+        for k in report_metrics:
+            s = sanitize_name(k)
+            if s in exposed:
+                continue
+            # per-name heartbeat ages are claimed by the labelled family
+            # (heartbeat_age_s{name=...}); the legacy name-suffixed keys only
+            # live in the metrics() dict view
+            if s.startswith("heartbeat_age_s_") and "heartbeat_age_s" in exposed:
+                continue
+            missing.append(k)
         print(
             f"[obs] scrape {server.url}/metrics: {len(text.splitlines())} lines, "
             f"{len(exposed)} series, active_alerts={obs.alerts.active()}"
@@ -284,6 +299,9 @@ def _run_lm_continuous(args, cfg, params) -> int:
     spec_ok = True
     if args.speculative:
         spec_ok = _gate_speculative(args, cfg, params)
+    fabric_ok = True
+    if args.fabric:
+        fabric_ok = _gate_fabric(args, cfg, params)
     if args.temperature or args.top_k:
         _demo_sampling(args, cfg, params)
     if args.json:
@@ -300,6 +318,7 @@ def _run_lm_continuous(args, cfg, params) -> int:
         and paged_ok
         and prefix_ok
         and spec_ok
+        and fabric_ok
         and obs_ok
     )
     return 0 if ok or not args.gate else 1
@@ -380,6 +399,76 @@ def _gate_speculative(args, cfg, params) -> bool:
         f"(token mismatches: {g['token_mismatches']:.0f})"
     )
     return g["token_mismatches"] == 0 and g["tokens_per_lane"] > 1
+
+
+def _gate_fabric(args, cfg, params) -> bool:
+    """Kill-one-replica failover on a synchronous N-replica fabric (fake
+    clock: the smoke never sleeps).  The hard gate is LOSSLESS determinism:
+    every request — including the ones stranded on the killed replica and
+    requeued — must emit the exact greedy token stream of a 1-replica run,
+    and the kill must actually strand work (``requeued > 0``).  On failure
+    every replica's flight recorder is dumped to
+    ``flightrec_replica_<name>.json`` (CI uploads ``flightrec_*.json``)."""
+    import numpy as np
+
+    from repro.obs import Obs
+    from repro.serve.fabric import FabricConfig
+    from repro.serve.loadgen import FabricLoadConfig, LMLoadConfig, make_lm_fabric
+
+    load = FabricLoadConfig(
+        lm=LMLoadConfig(
+            n_requests=min(args.requests, 12),
+            prompt_lens=(4, 8, 14),
+            new_tokens=(8, 16),
+            seed=args.seed,
+        )
+    )
+    kw = dict(n_slots=args.slots, page_size=args.block_size or 16)
+
+    def submit_all(fab):
+        stream = load.lm.request_stream(cfg.vocab_size)
+        return [fab.submit_lm(tok, mn) for tok, mn in stream]
+
+    oracle_fab, _ = make_lm_fabric(
+        cfg, params, FabricConfig(replicas=1, heartbeat_timeout_s=5.0), load, **kw
+    )
+    ofuts = submit_all(oracle_fab)
+    oracle_fab.drain()
+    oracle = [f.result(timeout=60) for f in ofuts]
+
+    t = {"now": 0.0}
+    fab_obs = Obs()
+    fab, _ = make_lm_fabric(
+        cfg, params,
+        FabricConfig(replicas=args.replicas, heartbeat_timeout_s=5.0),
+        load, obs=fab_obs, clock=lambda: t["now"], **kw,
+    )
+    futs = submit_all(fab)
+    for _ in range(3):  # let every replica admit + decode a few ticks
+        fab.step()
+    fab.kill("r0")
+    t["now"] += 10.0  # heartbeat goes stale; the next step drains r0
+    fab.drain()
+    outs = [f.result(timeout=60) for f in futs]
+    mismatches = sum(
+        1 for a, b in zip(oracle, outs) if not np.array_equal(a, b)
+    )
+    counts = fab_obs.recorder.counts()
+    print(
+        f"[serve] fabric: replicas={args.replicas} "
+        f"requeued={fab.requeued_total} dead={fab.dead_total} "
+        f"routes={counts.get('route', 0)} "
+        f"(requeue token mismatches: {mismatches})"
+    )
+    ok = mismatches == 0 and fab.requeued_total > 0 and fab.dead_total == 1
+    if not ok:
+        fab_obs.recorder.dump_json("flightrec_fabric.json")
+        for r in fab.replicas:
+            if r.lm is not None:
+                r.lm.obs.recorder.dump_json(f"flightrec_replica_{r.name}.json")
+        print("[serve] fabric gate FAILED; flight dumps -> flightrec_fabric.json, "
+              "flightrec_replica_*.json")
+    return ok
 
 
 def _demo_sampling(args, cfg, params):
@@ -466,6 +555,13 @@ def main(argv=None) -> int:
                         "token emitted per verify slot-lane)")
     p.add_argument("--draft-k", type=int, default=4,
                    help="speculative draft tokens proposed per verify tick")
+    p.add_argument("--fabric", action="store_true",
+                   help="with --continuous: also gate the replica-router "
+                        "failover path (kill one replica mid-decode on a fake "
+                        "clock; requeued requests must emit bit-identical "
+                        "tokens to a 1-replica run)")
+    p.add_argument("--replicas", type=int, default=2,
+                   help="fabric size for --fabric")
     p.add_argument("--prefix-cache", action="store_true",
                    help="with --paged: also gate the prefix-sharing radix "
                         "cache (bit-identical tokens + warm TTFT and peak "
@@ -494,6 +590,9 @@ def main(argv=None) -> int:
                         "(default: the built-in serve rules)")
     args = p.parse_args(argv)
 
+    if args.fabric and not (args.lm_arch and args.continuous):
+        p.error("--fabric routes continuous LM replicas; it requires "
+                "--lm-arch and --continuous")
     if args.prefix_cache and not args.paged:
         p.error("--prefix-cache shares KV pages; it requires --paged")
     if args.speculative and not args.paged:

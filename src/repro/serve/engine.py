@@ -8,7 +8,15 @@ either in-memory or from a ``repro.checkpoint`` directory (the training
 loop's own format — the round trip is pinned by tests).  Under a mesh the
 forward runs data-parallel inside ``shard_map`` (batch sharded over the
 ``data`` axis, params replicated) — the same execution regime as
-``train/ssl.make_sharded_ssl_train_step``, minus the gradients.
+``train/ssl.make_sharded_ssl_train_step``, minus the gradients.  Passing
+``model_axis`` additionally feature-shards the forward (tp mode): the
+projector's output layer splits over the ``feature`` logical axis exactly as
+``train/ssl.ssl_param_specs`` shards it for tp training, each device computes
+its (n, d/M) feature block, and the decorr engine's
+``all_to_all_features`` exchange re-assembles full-width rows — so one
+serving replica can span M devices (``fabric.FabricConfig(tp=M)``).  The
+last projector layer is a pure affine map (no activation), so the
+column-sharded forward is numerically identical to the single-device one.
 
 ``LMServeEngine`` is the token-model counterpart: it consumes the
 prefill/decode step factories from ``repro.train.serve`` and caches their
@@ -44,6 +52,7 @@ class ServeEngine:
         policy: BucketPolicy = BucketPolicy(),
         mesh: Optional[Mesh] = None,
         data_axis: str = "data",
+        model_axis: Optional[str] = None,
         dtype=jnp.float32,
     ):
         self.model_cfg = model_cfg
@@ -51,13 +60,35 @@ class ServeEngine:
         self.policy = policy.validate()
         self.mesh = mesh
         self.data_axis = data_axis
+        self.model_axis = model_axis
         self.dtype = dtype
+        self._tp_specs = None
+        if model_axis is not None and mesh is None:
+            raise ValueError("model_axis (tp mode) needs a mesh carrying that axis")
         if mesh is not None:
             dp = int(mesh.shape[data_axis])
-            if policy.align % dp:
+            mp = int(mesh.shape[model_axis]) if model_axis is not None else 1
+            if policy.align % (dp * mp):
+                # tp buckets split over BOTH axes: the all_to_all exchange
+                # turns (n/dp, d/mp) shards into (n/(dp*mp), d) rows
                 raise ValueError(
-                    f"BucketPolicy.align={policy.align} must be a multiple of "
-                    f"the {data_axis!r} mesh axis ({dp}) so every bucket shards evenly"
+                    f"BucketPolicy.align={policy.align} must be a multiple of the "
+                    f"mesh extent ({dp}x{mp}={dp * mp}) so every bucket shards evenly"
+                )
+            if model_axis is not None:
+                if self.d % mp:
+                    raise ValueError(
+                        f"embedding width d={self.d} must split evenly over the "
+                        f"{model_axis!r} axis ({mp} devices)"
+                    )
+                self._tp_specs = self._make_tp_specs()
+                # place params once (projector output layer feature-sharded,
+                # everything else replicated) so encode never re-shards
+                from jax.sharding import NamedSharding
+
+                self.params = jax.tree_util.tree_map(
+                    lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+                    self.params, self._tp_specs,
                 )
         self._compiled: Dict[int, callable] = {}
         # per-executable attribution; services attach obs.perf (None keeps
@@ -106,6 +137,24 @@ class ServeEngine:
         """Embedding width (the projector's output dimension)."""
         return int(self.model_cfg.projector_widths[-1])
 
+    def _make_tp_specs(self):
+        """Param placement for tp mode, mirroring ``train/ssl.ssl_param_specs``:
+        everything replicated except the projector's output layer, which
+        splits over the ``feature`` logical axis (mapped onto
+        ``self.model_axis``)."""
+        import repro.parallel.sharding as shd
+
+        rules = {"feature": (self.model_axis,)}
+        with shd.sharding_context(self.mesh, rules):
+            w_spec = shd.logical_to_spec((None, "feature"))
+            b_spec = shd.logical_to_spec(("feature",))
+        specs = {
+            "backbone": [{"w": P(), "b": P()} for _ in self.params["backbone"]],
+            "projector": [{"w": P(), "b": P()} for _ in self.params["projector"]],
+        }
+        specs["projector"][-1] = {"w": w_spec, "b": b_spec}
+        return specs
+
     def _embed_fn(self, bucket: int):
         fn = self._compiled.get(bucket)
         if fn is not None:
@@ -116,12 +165,32 @@ class ServeEngine:
             self.perf.cache_miss(f"embed_b{bucket}")
         if self.mesh is None:
             fn = jax.jit(embed)
-        else:
+        elif self.model_axis is None:
             sharded = shard_map(
                 embed,
                 mesh=self.mesh,
                 in_specs=(P(), P(self.data_axis)),
                 out_specs=P(self.data_axis),
+            )
+            fn = jax.jit(sharded)
+        else:
+            # tp: each device computes its (n/dp, d/mp) feature block of the
+            # projector output, then the decorr engine's exchange transposes
+            # feature shards into full-width row shards — the output lands
+            # batch-sharded over BOTH mesh axes
+            from repro.decorr.modes import all_to_all_features
+
+            model_axis = self.model_axis
+
+            def tp_embed(p, x):
+                """Feature-sharded forward + all_to_all row re-assembly."""
+                return all_to_all_features(embed(p, x), model_axis)
+
+            sharded = shard_map(
+                tp_embed,
+                mesh=self.mesh,
+                in_specs=(self._tp_specs, P(self.data_axis)),
+                out_specs=P((self.data_axis, self.model_axis)),
             )
             fn = jax.jit(sharded)
         self._compiled[bucket] = fn

@@ -1,0 +1,156 @@
+"""One serving replica: engine(s) + service(s) + its own telemetry island.
+
+A ``Replica`` owns a complete single-engine serving stack — an ``LMService``
+(slot pool, page pool, micro-batcher) and/or an ``EmbeddingService``, each
+with its OWN ``repro.obs.Obs`` bundle (registry, flight recorder, heartbeat)
+— and gives the fabric a uniform handle over it: route-relevant load gauges
+(``snapshot``), a synchronous scheduler tick (``tick``), thread lifecycle
+(``start``/``stop``) and a crash simulator (``kill``).
+
+Isolation is the point: replicas share nothing but (read-only) params, so a
+dead replica's state can simply be abandoned — its in-flight requests are
+re-submitted elsewhere from their prompts (``fabric.failover``) and greedy
+decode re-derives the identical token stream.
+
+``make_replica_mesh`` is the tp-sizing helper: ``FabricConfig(tp=M)`` gives
+each replica an M-device mesh whose ``model`` axis feature-shards the
+embedding forward (``ServeEngine(model_axis=...)``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def make_replica_mesh(tp: int = 1, data: int = 1, offset: int = 0):
+    """Build one replica's ``(data, model)`` device mesh from the local
+    devices (``None`` when the replica is single-device).  ``offset`` skips
+    devices claimed by earlier replicas so fabrics can tile a host."""
+    if tp <= 1 and data <= 1:
+        return None
+    import jax
+    from jax.sharding import Mesh
+
+    need = data * tp
+    devs = jax.devices()
+    if offset + need > len(devs):
+        raise ValueError(
+            f"replica mesh needs devices [{offset}, {offset + need}) but only "
+            f"{len(devs)} are visible"
+        )
+    grid = np.array(devs[offset : offset + need]).reshape(data, tp)
+    return Mesh(grid, ("data", "model"))
+
+
+class Replica:
+    """A named single-engine serving stack the fabric routes into."""
+
+    def __init__(self, name: str, *, lm=None, embed=None):
+        if lm is None and embed is None:
+            raise ValueError("a replica needs at least one service (lm= or embed=)")
+        self.name = str(name)
+        self.lm = lm
+        self.embed = embed
+        self.alive = True
+        self.crashed = False
+        self.started = False
+
+    def services(self) -> List:
+        """The replica's services, LM first."""
+        return [s for s in (self.lm, self.embed) if s is not None]
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def warmup(self, prompt_lens=None) -> "Replica":
+        """AOT-compile both services' executables (no request ever traces)."""
+        if self.lm is not None:
+            self.lm.warmup(prompt_lens=prompt_lens)
+        if self.embed is not None:
+            self.embed.warmup()
+        return self
+
+    def tick(self) -> int:
+        """One synchronous scheduler pass over both services (the fabric's
+        deterministic drive mode); returns in-flight work remaining."""
+        if self.crashed or not self.alive:
+            return 0
+        work = 0
+        if self.lm is not None:
+            work += self.lm.step(timeout=0.0) or 0
+        if self.embed is not None:
+            self.embed.run_pending(timeout=0.0)
+            work += self.embed.batcher.depth()
+        return work
+
+    def start(self) -> "Replica":
+        """Run each service's scheduler loop on its own daemon thread."""
+        for s in self.services():
+            s.start()
+        self.started = True
+        return self
+
+    def stop(self):
+        """Stop the service threads (graceful: queued work drains first)."""
+        for s in self.services():
+            s.stop()
+        self.started = False
+
+    def kill(self):
+        """Simulate a crash: the replica stops ticking (and stops feeding the
+        fabric heartbeat), WITHOUT completing or failing its in-flight
+        requests — exactly what a dead host looks like from the router.  It
+        stays ``alive`` (routable) until the stale heartbeat gets it declared
+        dead: that detection gap is the thing failover exists to close.  Only
+        meaningful under the synchronous drive mode; a started replica's
+        threads would keep serving."""
+        if self.started:
+            raise RuntimeError("kill() models a crash under synchronous ticking; "
+                               "stop() the threaded replica instead")
+        self.crashed = True
+
+    # -- router-facing load signals -----------------------------------------
+
+    def occupancy(self) -> float:
+        """Instantaneous slot occupancy (active / total) — the
+        ``slots_occupancy`` signal at routing time rather than the pool's
+        time-averaged gauge."""
+        if self.lm is None:
+            return 0.0
+        pool = self.lm.engine.pool
+        return (pool.n_slots - pool.free_slots()) / pool.n_slots
+
+    def outstanding(self) -> int:
+        """Requests queued or in flight across both services."""
+        n = 0
+        if self.lm is not None:
+            n += self.lm.outstanding()
+        if self.embed is not None:
+            n += self.embed.batcher.depth()
+        return n
+
+    def ttft_p99_s(self) -> float:
+        """``serve_ttft_seconds_p99`` derived from this replica's OWN TTFT
+        histogram (0.0 cold, or when the replica runs ``Obs.disabled()`` —
+        weighted-TTFT routing then degrades to pure least-occupancy)."""
+        if self.lm is None:
+            return 0.0
+        return self.lm.obs.registry.quantile_gauges().get("serve_ttft_seconds_p99", 0.0)
+
+    def snapshot(self) -> Dict[str, float]:
+        """The routing-relevant gauge subset, one read per dispatch."""
+        slots = float(self.lm.engine.pool.n_slots) if self.lm is not None else 1.0
+        return {
+            "slots_total": slots,
+            "slots_occupancy": self.occupancy(),
+            "queue_depth": float(self.outstanding()),
+            "serve_ttft_seconds_p99": self.ttft_p99_s(),
+        }
+
+    def metrics(self) -> Dict[str, float]:
+        """The replica's merged flat scrape surface (both services)."""
+        out: Dict[str, float] = {"replica_alive": 1.0 if self.alive else 0.0}
+        for s in self.services():
+            out.update(s.metrics())
+        return out

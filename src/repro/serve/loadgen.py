@@ -624,3 +624,235 @@ def lm_probe_oracle_err(service) -> Optional[float]:
         abs(got[f"decorr_{k}"] - float(v)) / max(abs(float(v)), 1e-6)
         for k, v in oracle.items()
     )
+
+
+# ---------------------------------------------------------------------------
+# Fabric: replica scaling, deterministic failover, tp-forward oracle
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricLoadConfig:
+    """Mixed fabric workload: the LM request ladder routed across replicas
+    plus an embedding side-channel (both deterministic by seed).  The LM
+    stream is what the scaling and failover gates measure; the embedding
+    stream rides along to exercise per-kind routing."""
+
+    lm: LMLoadConfig = LMLoadConfig(n_requests=16, prompt_lens=(4, 8, 14),
+                                    new_tokens=(8, 16))
+    n_embed: int = 0
+    embed_rows: int = 4
+    input_dim: int = 24
+    seed: int = 0
+
+    def embed_stream(self) -> List[np.ndarray]:
+        """Deterministic embedding request list (empty when n_embed=0)."""
+        rng = np.random.default_rng(self.seed + 1)
+        return [
+            rng.standard_normal((self.embed_rows, self.input_dim)).astype(np.float32)
+            for _ in range(self.n_embed)
+        ]
+
+
+def make_lm_fabric(
+    arch_cfg,
+    params,
+    fabric_cfg,
+    load: FabricLoadConfig,
+    *,
+    n_slots: int = 4,
+    max_len: Optional[int] = None,
+    page_size: int = 16,
+    embed_cfg=None,
+    embed_params=None,
+    obs=None,
+    clock=None,
+    engine_kw: Optional[Dict] = None,
+):
+    """Stand up a ``ServeFabric`` whose every replica runs a FRESH paged
+    continuous engine (and, when ``embed_cfg`` is given, a fresh embedding
+    service) over shared read-only params.  Returns ``(fabric, max_len)`` —
+    the pinned cache extent a bit-identity oracle must decode at."""
+    import time as _time
+
+    from repro.obs import Obs
+    from repro.serve.engine import ContinuousLMEngine, ServeEngine
+    from repro.serve.fabric import ServeFabric
+    from repro.serve.service import EmbeddingService, LMService
+
+    lm_load = load.lm
+    max_len = int(max_len or max(lm_load.max_request_len + 8, 32))
+    max_len = -(-max_len // page_size) * page_size
+
+    def lm_factory(name):
+        engine = ContinuousLMEngine(
+            arch_cfg, params, n_slots=n_slots, max_len=max_len,
+            max_prompt_len=max(lm_load.prompt_lens), paged=True,
+            page_size=page_size, **(engine_kw or {}),
+        )
+        return LMService(engine, obs=Obs())
+
+    embed_factory = None
+    if embed_cfg is not None:
+        def embed_factory(name):
+            return EmbeddingService(ServeEngine(embed_cfg, embed_params), obs=Obs())
+
+    fabric = ServeFabric(
+        fabric_cfg,
+        lm_factory=lm_factory,
+        embed_factory=embed_factory,
+        obs=obs,
+        clock=clock or _time.monotonic,
+    )
+    return fabric, max_len
+
+
+def run_fabric(fabric, load: FabricLoadConfig, *, timeout_s: float = 300.0):
+    """Drive one closed-loop burst through the fabric (threaded when
+    ``fabric.start()`` was called, synchronous ticking otherwise).  Returns
+    ``(summary, lm_outs, embed_outs)`` — outputs in submit order, so two runs
+    over the same load compare stream-for-stream."""
+    lm_svc = next(r.lm for r in fabric.replicas if r.lm is not None)
+    stream = load.lm.request_stream(lm_svc.engine.cfg.vocab_size)
+    lm_futs, em_futs = [], []
+    t_run = time.perf_counter()
+    for tokens, max_new in stream:
+        lm_futs.append(fabric.submit_lm(tokens, max_new))
+    for x in load.embed_stream():
+        em_futs.append(fabric.submit_embed(x))
+    fabric.drain(timeout_s=timeout_s)
+    lm_outs = [f.result(timeout=timeout_s) for f in lm_futs]
+    em_outs = [np.asarray(f.result(timeout=timeout_s)) for f in em_futs]
+    wall = time.perf_counter() - t_run
+    n_tok = sum(len(o) for o in lm_outs)
+    summary = _lm_summary([f.latency_s for f in lm_futs], n_tok, wall)
+    return summary, lm_outs, em_outs
+
+
+def compare_fabric(
+    arch_cfg,
+    params,
+    load: FabricLoadConfig,
+    *,
+    replicas: int = 2,
+    n_slots: int = 4,
+    page_size: int = 16,
+    embed_cfg=None,
+    embed_params=None,
+    heartbeat_timeout_s: float = 5.0,
+    repeats: int = 3,
+    obs=None,
+) -> Dict[str, Dict[str, float]]:
+    """Three-leg fabric comparison on one deterministic workload:
+
+      * ``single`` / ``multi`` — threaded 1-replica vs N-replica fabrics,
+        interleaved best-of-``repeats`` (XLA releases the GIL during device
+        execution, so N engine threads decode in parallel); the gate is
+        aggregate tok/s scaling AND route-independent token identity;
+      * ``failover`` — a synchronous 2-replica fabric on a FAKE clock: one
+        replica is killed mid-decode, the clock jumps past the heartbeat
+        timeout, and every requeued request must still emit the exact
+        single-replica token stream (``requeue_token_mismatches == 0``).
+    """
+    from repro.serve.fabric import FabricConfig
+
+    def build(n, clock=None, fab_obs=None):
+        return make_lm_fabric(
+            arch_cfg, params, FabricConfig(
+                replicas=n, heartbeat_timeout_s=heartbeat_timeout_s,
+            ), load,
+            n_slots=n_slots, page_size=page_size,
+            embed_cfg=embed_cfg, embed_params=embed_params,
+            obs=fab_obs, clock=clock,
+        )
+
+    prompt_lens = [int(t.shape[0]) for t, _ in
+                   load.lm.request_stream(arch_cfg.vocab_size)]
+    single_fab, _ = build(1)
+    multi_fab, _ = build(replicas, fab_obs=obs)
+    for fab in (single_fab, multi_fab):
+        fab.warmup(prompt_lens=prompt_lens).start()
+    # interleaved best-of-N: CPU wall clock is noisy and drifts over a run —
+    # alternating passes samples both fabrics under like conditions, and the
+    # token streams are deterministic on every pass
+    single = multi = single_outs = multi_outs = single_em = multi_em = None
+    try:
+        for _ in range(max(1, repeats)):
+            s, s_outs, s_em = run_fabric(single_fab, load)
+            if single is None or s["tok_per_s"] > single["tok_per_s"]:
+                single, single_outs, single_em = s, s_outs, s_em
+            m, m_outs, m_em = run_fabric(multi_fab, load)
+            if multi is None or m["tok_per_s"] > multi["tok_per_s"]:
+                multi, multi_outs, multi_em = m, m_outs, m_em
+    finally:
+        single_fab.stop()
+        multi_fab.stop()
+    route_mismatches = sum(
+        1 for a, b in zip(single_outs, multi_outs) if not np.array_equal(a, b)
+    )
+    embed_err = 0.0
+    for a, b in zip(single_em, multi_em):
+        embed_err = max(embed_err, float(np.max(np.abs(a - b))))
+
+    # failover leg: synchronous ticking on a fake clock so the kill is
+    # mid-decode by construction and detection never sleeps
+    t = {"now": 0.0}
+    fail_fab, _ = build(2, clock=lambda: t["now"])
+    fail_fab.warmup(prompt_lens=prompt_lens)
+    stream = load.lm.request_stream(arch_cfg.vocab_size)
+    futs = [fail_fab.submit_lm(tok, mn) for tok, mn in stream]
+    for _ in range(3):  # let both replicas admit + decode a few ticks
+        fail_fab.step()
+    fail_fab.kill("r0")
+    t["now"] += heartbeat_timeout_s * 2
+    fail_fab.drain()
+    fail_outs = [f.result(timeout=0) for f in futs]
+    requeue_mismatches = sum(
+        1 for a, b in zip(single_outs, fail_outs) if not np.array_equal(a, b)
+    )
+    degraded = _lm_summary(
+        [f.latency_s for f in futs], sum(len(o) for o in fail_outs), 1.0
+    )
+
+    return {
+        "single": single,
+        "multi": multi,
+        "failover": {
+            "requeued": float(fail_fab.requeued_total),
+            "replicas_dead": float(fail_fab.dead_total),
+            "degraded_p99_ms": degraded["p99_ms"],
+        },
+        "fabric_metrics": multi_fab.metrics(),
+        "gate": {
+            "replicas": float(replicas),
+            "scaling_x": multi["tok_per_s"] / max(single["tok_per_s"], 1e-9),
+            "token_mismatches": float(route_mismatches),
+            "embed_max_abs_err": embed_err,
+            "requeue_token_mismatches": float(requeue_mismatches),
+            "requeued": float(fail_fab.requeued_total),
+        },
+    }
+
+
+def tp_oracle_err(model_cfg, params, *, tp: int = 2, n: int = 24, seed: int = 0) -> float:
+    """Max relative error between the feature-sharded tp forward
+    (``ServeEngine(model_axis=...)`` over a ``(1, tp)`` mesh) and the
+    single-device oracle on one deterministic batch.  Needs ``tp`` visible
+    devices (tests force host devices via XLA_FLAGS in a subprocess)."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.serve.engine import ServeEngine
+
+    devs = jax.devices()
+    if len(devs) < tp:
+        raise ValueError(f"tp={tp} needs {tp} devices; {len(devs)} visible")
+    x = np.random.default_rng(seed).standard_normal(
+        (n, model_cfg.input_dim)
+    ).astype(np.float32)
+    ref = np.asarray(ServeEngine(model_cfg, params).encode(x))
+    mesh = Mesh(np.array(devs[:tp]).reshape(1, tp), ("data", "model"))
+    got = np.asarray(
+        ServeEngine(model_cfg, params, mesh=mesh, model_axis="model").encode(x)
+    )
+    return float(np.max(np.abs(got - ref)) / (np.max(np.abs(ref)) + 1e-12))

@@ -45,14 +45,28 @@ def collect_metrics(*parts, registry=None) -> Dict[str, float]:
     """Merge metric sources (flat dicts or objects with ``.metrics()``) into
     one scrape dict, optionally mirroring every key into a registry as
     gauges.  Both services assemble their scrape surface through this one
-    helper, so the legacy flat dict and the registry view cannot drift."""
+    helper, so the legacy flat dict and the registry view cannot drift.
+
+    A part exposing ``publish_metrics(registry) -> set`` (the
+    ``HeartbeatMonitor``) owns its own registry representation — typically a
+    LABELLED family instead of a name-suffixed family per component — and
+    returns the legacy flat keys it claims: those stay in the returned dict
+    (the ``metrics()`` compatibility view) but are excluded from the flat
+    ``registry.publish``, so per-component gauges do not explode the metric
+    family namespace once a fabric runs many replicas."""
     out: Dict[str, float] = {}
+    claimed: set = set()
     for part in parts:
         if part is None:
             continue
         out.update(part if isinstance(part, Mapping) else part.metrics())
+        if registry is not None and hasattr(part, "publish_metrics"):
+            claimed |= part.publish_metrics(registry)
     if registry is not None:
-        registry.publish(out)
+        if claimed:
+            registry.publish({k: v for k, v in out.items() if k not in claimed})
+        else:
+            registry.publish(out)
     return out
 
 
@@ -701,6 +715,11 @@ class LMService(_ObsAPI):
         if shutting_down and not pool.active() and not self._pending:
             return None
         return len(self._pending) + len(pool.active())
+
+    def outstanding(self) -> int:
+        """Requests queued, deferred or holding a slot — the load signal the
+        fabric router reads at dispatch time."""
+        return self.batcher.depth() + len(self._pending) + len(self.engine.pool.active())
 
     def drain(self, max_steps: int = 1_000_000) -> int:
         """Synchronously tick until the queue and the pool are empty (the

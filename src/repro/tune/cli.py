@@ -42,23 +42,29 @@ def jobs_for(n: int, d: int, block_size=None, forward_only=False, **tune_kw):
     """All tunable kernel shapes reached from one (n, d) regularizer call,
     forward AND backward pass (training dispatches the vjp shapes too).
 
-    ``block_size``: the grouped-regularizer b the training config will use
-    (None = the paper default via ``auto_block_size``) — pass the real one,
-    or the grouped shapes warmed here won't match runtime dispatch.
+    ``block_size``: the grouped-regularizer b the training config will use —
+    pass the real one, or the grouped shapes warmed here won't match runtime
+    dispatch.  With ``block_size=None`` the pre-tuner SEARCHES b itself: the
+    ``grouped_block_plan`` space enumerates every legal candidate
+    (``grouped_block_size_candidates``) and the winner — not a fixed paper
+    constant — drives the derived grouped shapes.  b is part of the loss
+    definition, so accuracy-pinned training configs should keep passing it.
     ``forward_only``: drop the vjp shapes — the serve path (inference probes)
     never differentiates, so pre-tuning them would warm dead entries.
 
-    The four-step inner matmul shapes depend on the FFT plan, so the plan is
-    tuned here first and the derived shapes read off the winner.  Returns
-    (plan TuneResult, remaining jobs).
+    The four-step inner matmul shapes depend on the FFT plan (and the grouped
+    shapes on b), so both plans are tuned here first and the derived shapes
+    read off the winners.  Returns ([plan TuneResults], remaining jobs).
     """
     from repro import tune
-    from repro.kernels.grouped_sumvec.ops import auto_block_size
 
-    plan_result = tune.tune("sumvec_fft_plan", (d,), **tune_kw)
-    dp, d1, d2 = (plan_result.best[k] for k in ("dp", "d1", "d2"))
-    # paper's accuracy sweet spot (Fig. 3) unless the caller pins its own b
-    b = min(int(block_size), d) if block_size else auto_block_size(d)
+    plans = [tune.tune("sumvec_fft_plan", (d,), **tune_kw)]
+    dp, d1, d2 = (plans[0].best[k] for k in ("dp", "d1", "d2"))
+    if block_size:
+        b = min(int(block_size), d)
+    else:
+        plans.append(tune.tune("grouped_block_plan", (n, d), **tune_kw))
+        b = int(plans[-1].best["b"])
     nb = math.ceil(d / b)
     nf = b // 2 + 1
     jobs = [
@@ -93,7 +99,7 @@ def jobs_for(n: int, d: int, block_size=None, forward_only=False, **tune_kw):
         if key not in seen:
             seen.add(key)
             uniq.append((kernel, shape))
-    return plan_result, uniq
+    return plans, uniq
 
 
 def main(argv=None) -> int:
@@ -114,7 +120,8 @@ def main(argv=None) -> int:
     p.add_argument(
         "--block-size",
         type=int,
-        help="grouped-regularizer b your training config uses (default: paper's 128)",
+        help="grouped-regularizer b your training config uses (default: "
+        "search the grouped_block_plan candidate space for it)",
     )
     p.add_argument(
         "--serve",
@@ -215,11 +222,12 @@ def main(argv=None) -> int:
 
     n_jobs = 0
     for n, d in shapes:
-        plan_result, jobs = jobs_for(
+        plans, jobs = jobs_for(
             n, d, block_size=args.block_size, forward_only=args.serve, **tune_kw
         )
-        report(plan_result)
-        n_jobs += 1
+        for plan_result in plans:
+            report(plan_result)
+            n_jobs += 1
         for kernel, shape in jobs:
             res = tune.tune(kernel, shape, **tune_kw)
             n_jobs += 1

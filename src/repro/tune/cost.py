@@ -106,6 +106,21 @@ def analytic_cost(kernel: str, shape: Shape, cfg: Config) -> Dict[str, float]:
         flops = 4.0 * b * sp * hp * hdp  # qk + pv per context token
         # k/v pages stream once; q and the revisited output block re-read per page
         hbm = F32 * b * (2.0 * sp * hp * hdp + 2.0 * nb * hp * hdp)
+    elif kernel == "grouped_block_plan":
+        n, d = shape
+        b = cfg["b"]
+        nb = _cdiv(d, b)
+        nf = b // 2 + 1
+        # block DFT forward, both views: (n*nb, b) @ (b, 2*nf) per view
+        flops = 2.0 * 2.0 * (n * nb) * b * (2.0 * nf)
+        hbm = F32 * 2.0 * (n * nb * b + b * 2 * nf + n * nb * 2 * nf)
+        # pairwise frequency-outer stage on the LANE-padded group axis —
+        # tiny nb pays full-tile padding, which is exactly what makes very
+        # small b lose despite its lower DFT flops
+        npad = next_multiple(nb, LANE)
+        flops += 2.0 * nf * (2.0 * n) * npad * npad
+        hbm += F32 * nf * (2.0 * n * npad + npad * npad)
+        grid = _cdiv(n * nb, SUBLANE) + nf
     elif kernel == "sumvec_fft_plan":
         (d,) = shape
         dp, d1, d2 = cfg["dp"], cfg["d1"], cfg["d2"]
@@ -132,10 +147,11 @@ def analytic_cost(kernel: str, shape: Shape, cfg: Config) -> Dict[str, float]:
 
 
 def rank_key(cost: Dict[str, float], kernel: str = "") -> Tuple[float, float, float]:
-    if kernel == "sumvec_fft_plan":
-        # plans trade padding against factor balance — arithmetic IS the
-        # tradeoff, and per-row costs are too small for the roofline's grid
-        # term to mean anything.  Rank flops-first.
+    if kernel in ("sumvec_fft_plan", "grouped_block_plan"):
+        # plans trade padding against factor balance (or DFT work against
+        # pairwise-stage padding) — arithmetic IS the tradeoff, and per-row
+        # costs are too small for the roofline's grid term to mean anything.
+        # Rank flops-first.
         return (cost["flops"], cost["hbm_bytes"], cost.get("vmem_bytes", 0.0))
     roofline_s = (
         max(cost["flops"] / PEAK_FLOPS, cost["hbm_bytes"] / HBM_BW)

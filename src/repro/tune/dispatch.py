@@ -45,6 +45,7 @@ _CANON_UNITS = {
     "freq_outer": (None, SUBLANE, LANE),
     "freq_mat": (None, SUBLANE, LANE, LANE),
     "sumvec_fft_plan": (None,),
+    "grouped_block_plan": (None, None),
     "paged_attention": (None, SUBLANE, SUBLANE, LANE),
 }
 

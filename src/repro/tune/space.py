@@ -17,16 +17,25 @@ tuner always has the historical baseline in its candidate set.
 
 Kernel names and their shape/config conventions:
 
-  kernel            shape                 config keys
-  ----------------  --------------------  -------------------------
-  xcorr_offdiag     (n, d)                tile_n, tile_d
-  cmatmul           (m, k, n)             tm, tn, tk
-  ctwiddle          (n, d)                tn
-  pmatmul           (m, k, n)             tm, tn, tk
-  freq_outer        (f, k, n)             tk, tn
-  freq_mat          (f, k, n, n2)         tk
-  sumvec_fft_plan   (d,)                  dp, d1, d2   (dp > d => padded)
-  paged_attention   (b, s, kv, hd)        page         (KV tokens per block)
+  kernel             shape                 config keys
+  -----------------  --------------------  -------------------------
+  xcorr_offdiag      (n, d)                tile_n, tile_d
+  cmatmul            (m, k, n)             tm, tn, tk
+  ctwiddle           (n, d)                tn
+  pmatmul            (m, k, n)             tm, tn, tk
+  freq_outer         (f, k, n)             tk, tn
+  freq_mat           (f, k, n, n2)         tk
+  sumvec_fft_plan    (d,)                  dp, d1, d2   (dp > d => padded)
+  grouped_block_plan (n, d)                b            (block DFT group size)
+  paged_attention    (b, s, kv, hd)        page         (KV tokens per block)
+
+``grouped_block_plan`` is a *plan* kernel like ``sumvec_fft_plan``: its
+config is the grouped regularizer's block size b itself (searched over
+``grouped_block_size_candidates`` instead of fixed by the caller), and the
+pipeline it selects delegates all tiling to pmatmul/freq_outer/freq_mat.
+NOTE: b is part of the LOSS definition — plan-tuning it is for perf studies
+and serve probes where any legal b computes a valid health signal; training
+configs that pin b for accuracy reasons must keep passing it explicitly.
 """
 
 from __future__ import annotations
@@ -57,6 +66,7 @@ KERNELS = (
     "freq_outer",
     "freq_mat",
     "sumvec_fft_plan",
+    "grouped_block_plan",
     "paged_attention",
 )
 
@@ -96,9 +106,9 @@ def vmem_bytes(kernel: str, shape: Shape, cfg: Config) -> int:
         npad = next_multiple(shape[2], LANE)
         n2pad = next_multiple(shape[3], LANE)
         return 2 * (tk * npad + npad * n2pad + tk * n2pad) * F32
-    if kernel == "sumvec_fft_plan":
-        # the plan delegates all blocking to cmatmul/ctwiddle; its own VMEM
-        # footprint is whatever those choose.
+    if kernel in ("sumvec_fft_plan", "grouped_block_plan"):
+        # plans delegate all blocking to the matmul/twiddle kernels they
+        # select; their own VMEM footprint is whatever those choose.
         return 0
     if kernel == "paged_attention":
         page = cfg["page"]
@@ -123,6 +133,9 @@ def is_legal(kernel: str, shape: Shape, cfg: Config) -> bool:
             return False
         # padded plans must be linear-correlation safe (no wraparound):
         return dp == d or dp >= 2 * d - 1
+    if kernel == "grouped_block_plan":
+        n, d = shape
+        return 2 <= cfg["b"] <= d
     lane_keys = {
         "xcorr_offdiag": ("tile_d",),
         "cmatmul": ("tn", "tk"),
@@ -234,6 +247,9 @@ def candidates(kernel: str, shape: Shape) -> List[Config]:
         for d1, d2 in _divisor_factorizations(d):
             out.append({"dp": d, "d1": d1, "d2": d2})
         out.extend(padded_plan_candidates(d))
+    elif kernel == "grouped_block_plan":
+        n, d = shape
+        out.extend({"b": b} for b in grouped_block_size_candidates(d))
     elif kernel == "paged_attention":
         b, s, kv, hd = shape
         for page in _tile_options(s, SUBLANE, _SUBLANE_TILES):
@@ -278,6 +294,12 @@ def default_config(kernel: str, shape: Shape) -> Config:
         (d,) = shape
         d1, d2 = balanced_factors(d)
         return {"dp": d, "d1": d1, "d2": d2}
+    if kernel == "grouped_block_plan":
+        n, d = shape
+        # the paper's Fig. 3 sweet spot: largest legal b <= 128 (one MXU
+        # tile); mirrors grouped_sumvec.ops.auto_block_size, inlined to keep
+        # space importable from the kernel modules
+        return {"b": max(b for b in grouped_block_size_candidates(d) if b <= 128)}
     if kernel == "paged_attention":
         b, s, kv, hd = shape
         # vLLM's classic 16-token block, clamped to short contexts
@@ -288,7 +310,8 @@ def default_config(kernel: str, shape: Shape) -> Config:
 def grouped_block_size_candidates(d: int) -> List[int]:
     """Legal grouped-regularizer block sizes b for width d: powers of two
     from 2 up to d, plus d itself (== ungrouped Eq. 6).  Consumed by
-    benchmarks/bench_blocksize.py and the CLI pre-tuner."""
+    benchmarks/bench_blocksize.py, the CLI pre-tuner, and the
+    ``grouped_block_plan`` candidate space."""
     out = []
     b = 2
     while b < d:

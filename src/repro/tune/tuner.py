@@ -125,6 +125,12 @@ def _build(kernel: str, shape: Tuple[int, ...], cfg: Config) -> Tuple[Callable, 
             q, kp, vp, bt, lens, scale=1.0 / max(hd, 1) ** 0.5
         )
         return fn, _ones((b, h, hd), (b * nb, page, h, hd), (b * nb, page, h, hd))
+    if kernel == "grouped_block_plan":
+        from repro.kernels.grouped_sumvec import ops as gops
+
+        n, d = shape
+        fn = lambda a, b_: gops.r_sum_kernel(a, b_, block_size=cfg["b"], q=2)
+        return fn, _ones((n, d), (n, d))
     if kernel == "sumvec_fft_plan":
         from repro.kernels.sumvec_fft import ops as fops
 

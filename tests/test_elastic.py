@@ -1,0 +1,133 @@
+"""``repro.ft.elastic`` — elastic re-mesh round trips.
+
+A checkpoint written under one mesh geometry must restore onto any other:
+``reshard_to_mesh`` rebuilds shardings for the new mesh from the same
+logical rules and falls back to replication when a leaf no longer divides.
+Single-device semantics run in-process; the grow (2 -> 4 hosts) and shrink
+(4 -> 2) round trips run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (same pattern as
+test_serve_system) so the main pytest process keeps one CPU device.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.checkpoint.checkpointer import save_checkpoint
+from repro.ft.elastic import _divisible, elastic_restore, reshard_to_mesh
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _mesh1():
+    return Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+class TestReshardSemantics:
+    def test_values_preserved_and_replicated_fallbacks(self):
+        mesh = _mesh1()
+        state = {
+            "w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": np.arange(5, dtype=np.float32),
+        }
+        # spec None -> replication; a spec that does not divide -> replication
+        out = reshard_to_mesh(
+            state, mesh, lambda path, leaf: None if leaf.ndim == 1 else P("data")
+        )
+        for k in state:
+            np.testing.assert_array_equal(np.asarray(out[k]), state[k])
+        assert out["w"].sharding.is_fully_replicated or mesh.size == 1
+
+    def test_divisible_handles_tuple_axes_and_short_specs(self):
+        mesh = _mesh1()
+        assert _divisible((8, 6), P("data"), mesh)
+        assert _divisible((8,), P(("data",)), mesh)
+        # spec shorter than rank: trailing dims unconstrained
+        assert _divisible((8, 6, 4), P("data"), mesh)
+
+    def test_elastic_restore_defaults_to_replication(self, tmp_path):
+        state = {"w": np.ones((4, 4), np.float32) * 3.0}
+        save_checkpoint(str(tmp_path), 1, state)
+        restored = elastic_restore(str(tmp_path), 1, state, _mesh1())
+        np.testing.assert_array_equal(np.asarray(restored["w"]), state["w"])
+
+
+def _run_subprocess(code: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=420
+    )
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-3000:]}"
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_grow_and_shrink_round_trip():
+    """Save under a 2-device mesh, restore onto 4 (grow), save again, restore
+    onto 2 (shrink): every leaf keeps its values bit-exactly, batch-sharded
+    leaves re-shard to the new extent, and a leaf that stops dividing falls
+    back to replication instead of failing."""
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json, tempfile
+        import jax, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.checkpoint.checkpointer import save_checkpoint
+        from repro.ft.elastic import elastic_restore, reshard_to_mesh
+
+        devs = jax.devices()
+        mesh2 = Mesh(np.array(devs[:2]), ("data",))
+        mesh4 = Mesh(np.array(devs[:4]), ("data",))
+
+        rng = np.random.default_rng(0)
+        state = {
+            "w": rng.standard_normal((8, 6)).astype(np.float32),   # divides 2 and 4
+            "odd": rng.standard_normal((6, 3)).astype(np.float32), # divides 2, NOT 4
+            "scalar": np.float32(7.5),
+        }
+        spec_fn = lambda path, leaf: P("data") if leaf.ndim == 2 else P()
+
+        placed2 = reshard_to_mesh(state, mesh2, spec_fn)
+        ckpt = tempfile.mkdtemp(prefix="elastic_ckpt_")
+        save_checkpoint(ckpt, 1, placed2)
+
+        out = {}
+        # grow 2 -> 4
+        grown = elastic_restore(ckpt, 1, state, mesh4, spec_fn=spec_fn)
+        out["grow_err"] = float(max(
+            np.max(np.abs(np.asarray(grown[k]) - state[k])) for k in ("w", "odd")
+        ))
+        out["grow_w_sharded"] = not grown["w"].sharding.is_fully_replicated
+        # odd no longer divides 4 -> replication fallback, values intact
+        out["grow_odd_replicated"] = bool(grown["odd"].sharding.is_fully_replicated)
+        out["grow_w_nshards"] = len({s.device for s in grown["w"].addressable_shards})
+
+        # shrink 4 -> 2 (save the grown state, restore onto the small mesh)
+        save_checkpoint(ckpt, 2, grown)
+        shrunk = elastic_restore(ckpt, 2, state, mesh2, spec_fn=spec_fn)
+        out["shrink_err"] = float(max(
+            np.max(np.abs(np.asarray(shrunk[k]) - state[k])) for k in ("w", "odd")
+        ))
+        out["shrink_odd_sharded"] = not shrunk["odd"].sharding.is_fully_replicated
+        out["shrink_w_nshards"] = len({s.device for s in shrunk["w"].addressable_shards})
+        out["scalar"] = float(np.asarray(shrunk["scalar"]))
+        print(json.dumps(out))
+        """
+    )
+    res = _run_subprocess(code)
+    assert res["grow_err"] == 0.0, res
+    assert res["shrink_err"] == 0.0, res
+    assert res["grow_w_sharded"] and res["grow_w_nshards"] == 4, res
+    assert res["grow_odd_replicated"], res
+    assert res["shrink_odd_sharded"] and res["shrink_w_nshards"] == 2, res
+    assert res["scalar"] == 7.5, res

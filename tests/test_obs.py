@@ -765,9 +765,18 @@ class TestLMServiceObs:
                   "heartbeat_stale", "admission_deferred", "paged_pages_in_use",
                   "paged_pages_utilization"):
             assert k in m, f"legacy key {k} vanished from metrics()"
-        # ...and the registry mirrors the flat dict exactly, key for key
+        # ...and the registry mirrors the flat dict, key for key — except the
+        # per-name heartbeat ages, which the registry carries as label
+        # children of ONE family (heartbeat_age_s{name=}) instead of a
+        # family per component
         for k, v in m.items():
+            if k.startswith("heartbeat_age_s_"):
+                continue
             assert obs.registry.value(k) == pytest.approx(v), k
+        assert obs.registry.value("heartbeat_age_s_serve_lm_decode") is None
+        hb = svc.heartbeat
+        for name in hb._last:
+            assert obs.registry.value("heartbeat_age_s", {"name": name}) is not None
 
     def test_scrape_and_trace_tell_one_story(self, gemma, tmp_path):
         obs = Obs(alerts=AlertManager(default_serve_rules()))
@@ -775,7 +784,7 @@ class TestLMServiceObs:
         futs = self._run(svc, gemma[0])
         text = svc.scrape()
         assert "# TYPE tok_per_s gauge" in text
-        assert "heartbeat_age_s_serve_lm_decode" in text
+        assert 'heartbeat_age_s{name="serve.lm_decode"}' in text
         assert "serve_decode_step_seconds_bucket" in text  # step-time histogram
         # the trace reconstructs a full lifecycle: queue -> prefill ->
         # >=1 decode tick -> retire

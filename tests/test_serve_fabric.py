@@ -1,0 +1,423 @@
+"""repro.serve.fabric — router policy, failover determinism, tp forward.
+
+The failover gate is the one that matters: a replica killed mid-decode must
+have every stranded request requeued and the final greedy token streams stay
+BIT-IDENTICAL to a run that never saw the failure.  Everything runs on a
+fake clock (nothing sleeps); the tp-forward oracle runs in a subprocess with
+forced host devices (same pattern as test_serve_system).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.ft.watchdog import HeartbeatMonitor
+from repro.models import init_params
+from repro.obs import Obs
+from repro.serve import ContinuousLMEngine, EmbeddingService, LMService, ServeEngine
+from repro.serve.fabric import (
+    FabricConfig,
+    FailoverController,
+    Replica,
+    Router,
+    ServeFabric,
+    make_replica_mesh,
+    prefix_key,
+)
+from repro.train.ssl import SSLModelConfig, init_ssl_params
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MODEL = SSLModelConfig(input_dim=24, backbone_widths=(32,), projector_widths=(48, 48))
+
+
+# ---------------------------------------------------------------------------
+# Router: pure policy over replica snapshots
+# ---------------------------------------------------------------------------
+
+
+class FakeReplica:
+    def __init__(self, name, occ=0.0, queue=0.0, ttft=0.0, slots=4.0, alive=True):
+        self.name = name
+        self.alive = alive
+        self._snap = {
+            "slots_total": slots,
+            "slots_occupancy": occ,
+            "queue_depth": queue,
+            "serve_ttft_seconds_p99": ttft,
+        }
+
+    def snapshot(self):
+        return dict(self._snap)
+
+
+class TestRouter:
+    def test_least_occupancy_prefers_idle_replica(self):
+        r = Router("least_occupancy", affinity_tokens=0)
+        a, b = FakeReplica("a", occ=0.75), FakeReplica("b", occ=0.25)
+        chosen, how = r.pick([a, b])
+        assert chosen is b and how == "least_occupancy"
+
+    def test_queue_depth_breaks_equal_occupancy(self):
+        r = Router("least_occupancy", affinity_tokens=0)
+        a = FakeReplica("a", occ=0.5, queue=8.0)
+        b = FakeReplica("b", occ=0.5, queue=1.0)
+        assert r.pick([a, b])[0] is b
+
+    def test_weighted_ttft_sheds_slow_replica(self):
+        r = Router("weighted_ttft", affinity_tokens=0)
+        a = FakeReplica("a", occ=0.5, ttft=0.500)  # slow admitter
+        b = FakeReplica("b", occ=0.6, ttft=0.001)  # busier but fast
+        assert r.pick([a, b])[0] is b
+
+    def test_weighted_ttft_cold_degrades_to_occupancy(self):
+        r = Router("weighted_ttft", affinity_tokens=0)
+        a, b = FakeReplica("a", occ=0.75), FakeReplica("b", occ=0.25)
+        assert r.pick([a, b])[0] is b  # both ttft=0: floor keeps ordering
+
+    def test_affinity_sticks_then_remaps_on_death(self):
+        r = Router("least_occupancy", affinity_tokens=4)
+        a, b = FakeReplica("a", occ=0.0), FakeReplica("b", occ=0.9)
+        tokens = np.arange(8, dtype=np.int32)
+        first, how1 = r.pick([a, b], tokens=tokens)
+        assert first is a and how1 == "least_occupancy"
+        # load inverts, but the shared prefix stays sticky
+        a._snap["slots_occupancy"], b._snap["slots_occupancy"] = 0.9, 0.0
+        again, how2 = r.pick([a, b], tokens=tokens)
+        assert again is a and how2 == "affinity"
+        # a dies: mapping dropped, rerouted by load, re-recorded
+        a.alive = False
+        r.forget("a")
+        third, how3 = r.pick([a, b], tokens=tokens)
+        assert third is b and how3 == "least_occupancy"
+        assert r.pick([a, b], tokens=tokens) == (b, "affinity")
+
+    def test_prefix_key_only_hashes_leading_tokens(self):
+        base = np.arange(32, dtype=np.int32)
+        other = base.copy()
+        other[20:] += 7  # tail differs
+        assert prefix_key(base, 16) == prefix_key(other, 16)
+        assert prefix_key(base, 32) != prefix_key(other, 32)
+
+    def test_no_healthy_replica_raises(self):
+        r = Router()
+        with pytest.raises(RuntimeError, match="no healthy replica"):
+            r.pick([FakeReplica("a", alive=False)])
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError, match="unknown routing policy"):
+            Router("round_robin")
+
+
+# ---------------------------------------------------------------------------
+# Failover controller: edge-triggered staleness on an injectable clock
+# ---------------------------------------------------------------------------
+
+
+class TestFailoverController:
+    def test_newly_dead_reports_each_replica_once(self):
+        t = {"now": 0.0}
+        fc = FailoverController(
+            HeartbeatMonitor(default_timeout_s=5.0, clock=lambda: t["now"]),
+            timeout_s=5.0,
+        )
+        fc.register("r0")
+        fc.register("r1")
+        t["now"] = 3.0
+        fc.beat("r1")
+        t["now"] = 6.0  # r0 stale (6s), r1 fresh (3s)
+        assert fc.newly_dead(["r0", "r1"]) == ["r0"]
+        assert fc.newly_dead(["r0", "r1"]) == []  # edge-triggered
+        assert fc.is_dead("r0") and not fc.is_dead("r1")
+        assert fc.metrics() == {"fabric_replicas_dead": 1.0}
+
+    def test_revive_rearms_detection(self):
+        t = {"now": 0.0}
+        fc = FailoverController(
+            HeartbeatMonitor(default_timeout_s=2.0, clock=lambda: t["now"]),
+            timeout_s=2.0,
+        )
+        fc.register("r0")
+        t["now"] = 3.0
+        assert fc.newly_dead(["r0"]) == ["r0"]
+        fc.revive("r0")
+        assert not fc.is_dead("r0")
+        t["now"] = 6.0
+        assert fc.newly_dead(["r0"]) == ["r0"]  # dies again after re-join
+
+
+# ---------------------------------------------------------------------------
+# ServeFabric end-to-end (synchronous drive, fake clock)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = get_config("gemma2-2b").reduced()
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _lm_factory(gemma):
+    cfg, params = gemma
+
+    def factory(name):
+        eng = ContinuousLMEngine(
+            cfg, params, n_slots=4, max_len=64, max_prompt_len=24,
+            paged=True, page_size=16,
+        )
+        return LMService(eng, obs=Obs())
+
+    return factory
+
+
+def _embed_factory():
+    params = init_ssl_params(jax.random.PRNGKey(1), MODEL)
+
+    def factory(name):
+        return EmbeddingService(ServeEngine(MODEL, params), obs=Obs())
+
+    return factory, params
+
+
+def _prompts(cfg, n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, 8).astype(np.int32) for _ in range(n)]
+
+
+class TestServeFabric:
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="at least one replica"):
+            FabricConfig(replicas=0).validate()
+        with pytest.raises(ValueError, match="unknown policy"):
+            FabricConfig(policy="nope").validate()
+        with pytest.raises(ValueError, match="lm_factory"):
+            ServeFabric(FabricConfig())
+
+    def test_replica_requires_a_service(self):
+        with pytest.raises(ValueError, match="at least one service"):
+            Replica("empty")
+
+    def test_kill_rejects_threaded_replicas(self):
+        r = Replica("x", lm=object())
+        r.started = True  # as if start() ran
+        with pytest.raises(RuntimeError, match="synchronous"):
+            r.kill()
+
+    def test_failover_requeues_and_tokens_stay_bit_identical(self, gemma):
+        cfg, _ = gemma
+        factory = _lm_factory(gemma)
+        prompts = _prompts(cfg)
+
+        # single-engine greedy oracle
+        oracle_svc = factory("oracle")
+        ofuts = [oracle_svc.submit(p, 6) for p in prompts]
+        oracle_svc.drain()
+        oracle = [f.result(timeout=60) for f in ofuts]
+
+        t = {"now": 0.0}
+        obs = Obs()
+        fab = ServeFabric(
+            FabricConfig(replicas=2, heartbeat_timeout_s=5.0),
+            lm_factory=factory, obs=obs, clock=lambda: t["now"],
+        )
+        futs = [fab.submit_lm(p, 6) for p in prompts]
+        for _ in range(3):  # both replicas admit + decode a few ticks
+            fab.step()
+        fab.kill("r0")
+        t["now"] += 10.0  # heartbeat goes stale; step() declares r0 dead
+        fab.drain()
+
+        outs = [f.result(timeout=60) for f in futs]
+        assert all(np.array_equal(a, b) for a, b in zip(outs, oracle))
+        assert fab.requeued_total >= 1 and fab.dead_total == 1
+        assert not fab.replica("r0").alive and fab.replica("r1").alive
+
+        counts = obs.recorder.counts()
+        assert counts["replica_join"] == 2
+        assert counts["replica_dead"] == 1
+        assert counts["route"] == len(prompts)
+        assert counts["requeue"] == fab.requeued_total
+
+    def test_requests_finished_before_crash_are_delivered(self, gemma):
+        cfg, _ = gemma
+        factory = _lm_factory(gemma)
+        (prompt,) = _prompts(cfg, n=1)
+        t = {"now": 0.0}
+        fab = ServeFabric(
+            FabricConfig(replicas=2, heartbeat_timeout_s=5.0),
+            lm_factory=factory, clock=lambda: t["now"],
+        )
+        fut = fab.submit_lm(prompt, 2)
+        tracked = next(iter(fab._inflight.values()))
+        owner = fab.replica(tracked.replica)
+        while not tracked.inner.done():  # finish the decode BEFORE the crash lands
+            owner.tick()
+        fab.kill(owner.name)
+        t["now"] += 10.0
+        fab.step()  # _on_dead sees a done inner future: deliver, don't requeue
+        assert fab.dead_total == 1 and fab.requeued_total == 0
+        assert len(fut.result(timeout=0)) == 2
+
+    def test_mixed_embed_and_lm_routing(self, gemma):
+        cfg, _ = gemma
+        embed_factory, eparams = _embed_factory()
+        fab = ServeFabric(
+            FabricConfig(replicas=2, heartbeat_timeout_s=5.0),
+            lm_factory=_lm_factory(gemma), embed_factory=embed_factory,
+        )
+        x = np.random.default_rng(3).standard_normal((4, 24)).astype(np.float32)
+        efut = fab.submit_embed(x)
+        lfut = fab.submit_lm(_prompts(cfg, n=1)[0], 3)
+        fab.drain()
+        ref = np.asarray(ServeEngine(MODEL, eparams).encode(x))
+        np.testing.assert_allclose(np.asarray(efut.result(timeout=60)), ref, atol=1e-5)
+        assert len(lfut.result(timeout=60)) == 3
+
+    def test_dead_replica_replacement_rejoins(self, gemma):
+        cfg, _ = gemma
+        factory = _lm_factory(gemma)
+        t = {"now": 0.0}
+        fab = ServeFabric(
+            FabricConfig(replicas=2, heartbeat_timeout_s=5.0),
+            lm_factory=factory, clock=lambda: t["now"],
+        )
+        with pytest.raises(ValueError, match="already joined"):
+            fab.add_replica(Replica("r0", lm=factory("dup")))
+        fab.kill("r0")
+        t["now"] += 10.0
+        fab.step()
+        assert fab.replica("r0").alive is False
+        fab.add_replica(Replica("r0", lm=factory("r0b")))
+        assert fab.replica("r0").alive
+        fut = fab.submit_lm(_prompts(cfg, n=1)[0], 2)
+        fab.drain()
+        assert len(fut.result(timeout=60)) == 2
+        assert len(fab.replicas) == 2
+
+    def test_metrics_labelled_and_legacy_views(self, gemma):
+        obs = Obs()
+        fab = ServeFabric(
+            FabricConfig(replicas=2, heartbeat_timeout_s=5.0),
+            lm_factory=_lm_factory(gemma), obs=obs,
+        )
+        fab.step()
+        m = fab.metrics()
+        # flat aggregates + legacy per-name heartbeat keys stay in the dict
+        assert m["fabric_replicas"] == 2.0 and m["fabric_replicas_alive"] == 2.0
+        assert "heartbeat_age_s_fabric_replica_r0" in m
+        # the registry carries labelled children, not per-name families
+        ad = obs.registry.as_dict()
+        assert 'fabric_replica_alive{replica="r0"}' in ad
+        assert 'heartbeat_age_s{name="fabric.replica.r1"}' in ad
+        assert "heartbeat_age_s_fabric_replica_r0" not in ad
+        assert obs.registry.value("fabric_replicas") == 2.0
+        per = fab.replica_metrics()
+        assert set(per) == {"r0", "r1"} and per["r0"]["replica_alive"] == 1.0
+
+    def test_kill_is_undetected_until_stale(self, gemma):
+        t = {"now": 0.0}
+        fab = ServeFabric(
+            FabricConfig(replicas=2, heartbeat_timeout_s=5.0),
+            lm_factory=_lm_factory(gemma), clock=lambda: t["now"],
+        )
+        fab.kill("r1")
+        fab.step()
+        assert fab.replica("r1").alive  # crashed but not yet declared
+        t["now"] += 10.0
+        fab.step()
+        assert not fab.replica("r1").alive and fab.dead_total == 1
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat publish_metrics: one labelled family, legacy keys claimed
+# ---------------------------------------------------------------------------
+
+
+class TestHeartbeatLabels:
+    def test_publish_metrics_claims_legacy_keys(self):
+        from repro.obs.registry import MetricsRegistry
+
+        t = {"now": 0.0}
+        hb = HeartbeatMonitor(default_timeout_s=5.0, clock=lambda: t["now"])
+        hb.register("serve.dispatch")
+        hb.register("serve.lm_decode")
+        t["now"] = 1.5
+        reg = MetricsRegistry()
+        claimed = hb.publish_metrics(reg)
+        assert claimed == {
+            "heartbeat_age_s_serve_dispatch",
+            "heartbeat_age_s_serve_lm_decode",
+        }
+        assert reg.value("heartbeat_age_s", {"name": "serve.dispatch"}) == 1.5
+        assert reg.value("heartbeat_components") == 2.0
+        ad = reg.as_dict()
+        assert 'heartbeat_age_s{name="serve.lm_decode"}' in ad
+        assert "heartbeat_age_s_serve_dispatch" not in ad
+        # the dict view keeps the legacy name-suffixed keys for callers
+        assert hb.metrics()["heartbeat_age_s_serve_dispatch"] == 1.5
+
+    def test_collect_metrics_skips_claimed_keys_in_registry(self):
+        from repro.obs.registry import MetricsRegistry
+        from repro.serve.service import collect_metrics
+
+        t = {"now": 0.0}
+        hb = HeartbeatMonitor(default_timeout_s=5.0, clock=lambda: t["now"])
+        hb.register("serve.dispatch")
+        reg = MetricsRegistry()
+        out = collect_metrics({"queue_depth": 3.0}, hb, registry=reg)
+        assert out["queue_depth"] == 3.0
+        assert "heartbeat_age_s_serve_dispatch" in out  # dict view: legacy
+        assert reg.value("queue_depth") == 3.0
+        assert reg.get("heartbeat_age_s_serve_dispatch") is None  # labelled only
+
+
+# ---------------------------------------------------------------------------
+# tp forward: feature-sharded replica matches the single-device oracle
+# ---------------------------------------------------------------------------
+
+
+def test_make_replica_mesh_single_device_is_none():
+    assert make_replica_mesh(tp=1) is None
+    with pytest.raises(ValueError, match="devices"):
+        make_replica_mesh(tp=64)
+
+
+def test_tp_forward_matches_single_device_oracle():
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax
+        from repro.serve.fabric import make_replica_mesh
+        from repro.serve.loadgen import tp_oracle_err
+        from repro.train.ssl import SSLModelConfig, init_ssl_params
+
+        model = SSLModelConfig(input_dim=24, backbone_widths=(32,), projector_widths=(48, 48))
+        params = init_ssl_params(jax.random.PRNGKey(0), model)
+        out = {"tp2": tp_oracle_err(model, params, tp=2),
+               "tp4": tp_oracle_err(model, params, tp=4)}
+        mesh = make_replica_mesh(tp=2, offset=2)
+        out["mesh_axes"] = list(mesh.axis_names)
+        out["mesh_shape"] = [mesh.shape[a] for a in mesh.axis_names]
+        print(json.dumps(out))
+        """
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=420
+    )
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-3000:]}"
+    res = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert res["tp2"] < 1e-5, res
+    assert res["tp4"] < 1e-5, res
+    assert res["mesh_axes"] == ["data", "model"] and res["mesh_shape"] == [1, 2]

@@ -28,6 +28,7 @@ SHAPES = {
     "freq_outer": (9, 48, 24),
     "freq_mat": (9, 48, 24, 24),
     "sumvec_fft_plan": (101,),
+    "grouped_block_plan": (24, 48),
     "paged_attention": (4, 48, 2, 16),
 }
 
@@ -433,3 +434,44 @@ class TestCLI:
         assert any(k.startswith("xcorr_offdiag|") for k in entries)
         out = capsys.readouterr().out
         assert "tuned" in out
+
+
+# ---------------------------------------------------------------------------
+# grouped_block_plan: the block size b searched as a plan config
+# ---------------------------------------------------------------------------
+
+
+class TestGroupedBlockPlan:
+    def test_space_enumerates_every_legal_b(self):
+        shape = (64, 48)
+        cands = tspace.candidates("grouped_block_plan", shape)
+        assert [c["b"] for c in cands] == tspace.grouped_block_size_candidates(48)
+        # default mirrors auto_block_size: largest legal b <= 128
+        assert tspace.default_config("grouped_block_plan", shape) == {"b": 48}
+        assert tspace.default_config("grouped_block_plan", (64, 2048)) == {"b": 128}
+        assert not tspace.is_legal("grouped_block_plan", shape, {"b": 1})
+        assert not tspace.is_legal("grouped_block_plan", shape, {"b": 96})
+
+    def test_dry_tune_compiles_real_pipeline(self):
+        res = tune.tune(
+            "grouped_block_plan", (16, 16), mode="dry",
+            max_candidates=2, persist=False,
+        )
+        assert res.best["b"] in tspace.grouped_block_size_candidates(16)
+        for c in res.candidates:
+            assert c.cost["flops"] > 0  # compiled, not just modelled
+
+    def test_jobs_for_searches_b_when_unpinned(self):
+        from repro.tune.cli import jobs_for
+
+        plans, jobs = jobs_for(16, 16, mode="analytic", persist=False)
+        assert [p.kernel for p in plans] == ["sumvec_fft_plan", "grouped_block_plan"]
+        b = plans[-1].best["b"]
+        assert b in tspace.grouped_block_size_candidates(16)
+        # the searched winner drives the derived grouped shapes
+        nb = -(-16 // b)
+        nf = b // 2 + 1
+        assert ("pmatmul", (16 * nb, b, 2 * nf)) in jobs
+        # a caller-pinned b skips the search entirely (b is loss-defining)
+        plans_pinned, _ = jobs_for(16, 16, block_size=8, mode="analytic", persist=False)
+        assert [p.kernel for p in plans_pinned] == ["sumvec_fft_plan"]
